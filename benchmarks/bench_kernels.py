@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs XLA reference.
+
+On this CPU container interpret-mode wall times measure Python emulation,
+not TPU performance — the numbers that matter here are (a) correctness
+parity and (b) the XLA-path timings that set the CPU baseline.  On a real
+TPU flip interpret off (kernels/ops.py does this automatically).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_ad as J
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5, warmup=2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # moments: host numpy vs jitted segment-sum vs pallas-interpret
+    N, F = 4096, 256
+    fids = jnp.asarray(rng.integers(0, F, N), jnp.int32)
+    durs = jnp.asarray(rng.lognormal(3, 1, N), jnp.float32)
+    table = J.init_table(F)
+    t_xla = _time(lambda: J.ad_step(table, fids, durs))
+    t_pal = _time(lambda: ops.moments_update(table, fids, durs))
+    rows.append({"name": "moments_xla_segment", "us": t_xla * 1e6, "n_events": N})
+    rows.append({"name": "moments_pallas_interp", "us": t_pal * 1e6, "n_events": N})
+
+    # flash attention
+    B, S, H, KV, hd = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)), jnp.bfloat16)
+    t_ref = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, k, v)
+    t_pal = _time(lambda: ops.flash_attention(q, k, v), reps=2, warmup=1)
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    rows.append({"name": "attn_xla_ref", "us": t_ref * 1e6,
+                 "gflops_eff": flops / t_ref / 1e9})
+    rows.append({"name": "attn_pallas_interp", "us": t_pal * 1e6})
+
+    # mamba scan
+    B, S, di, st = 1, 512, 64, 16
+    a = jnp.asarray(np.exp(-rng.uniform(0.1, 1, (B, S, di, st))), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (B, S, di, st)), jnp.float32)
+    C = jnp.asarray(rng.normal(0, 1, (B, S, st)), jnp.float32)
+    t_ref = _time(jax.jit(lambda x, y, z: ref.mamba_scan_ref(x, y, z)[0]), a, b, C)
+    t_pal = _time(lambda: ops.mamba_scan(a, b, C)[0], reps=2, warmup=1)
+    rows.append({"name": "mamba_xla_ref", "us": t_ref * 1e6, "elems": B * S * di * st})
+    rows.append({"name": "mamba_pallas_interp", "us": t_pal * 1e6})
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        extra = ";".join(f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+                         for k, v in r.items() if k not in ("name", "us"))
+        print(f"kernels/{r['name']},{r['us']:.1f},{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

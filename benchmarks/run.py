@@ -1,0 +1,40 @@
+"""Benchmark driver — one harness per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+  fig7_ad_scaling   distributed vs non-distributed AD (paper Fig. 7)
+  table1_overhead   tracing/Chimbuko execution-time overhead (Fig. 8/Table I)
+  fig9_reduction    trace-size reduction factors (Fig. 9)
+  kernels           Pallas-vs-XLA micro-benchmarks
+  roofline          per-cell roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_ad_scaling,
+        bench_kernels,
+        bench_overhead,
+        bench_reduction,
+        bench_roofline,
+    )
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for mod in (bench_ad_scaling, bench_overhead, bench_reduction, bench_kernels,
+                bench_roofline):
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Chimbuko-on-JAX — workflow-level performance trace analysis for
+multi-pod training/serving, plus the 10-architecture model zoo it monitors."""

@@ -1,0 +1,2 @@
+"""Atomic, async, reshardable checkpointing."""
+from . import ckpt  # noqa: F401

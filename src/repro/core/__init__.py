@@ -1,0 +1,25 @@
+"""Chimbuko core: the paper's primary contribution in JAX/numpy.
+
+Submodules:
+  events      trace event schema (TAU analogue)
+  stats       Pébay one-pass parallel moments (paper ref [14])
+  callstack   vectorized call-stack builder with cross-frame carryover
+  ad          on-node AD module (SSTD μ±6σ, HBOS alternative)
+  ps          online AD parameter server (async, no barriers)
+  reduction   anomaly-based data reduction (Figs. 8/9)
+  provenance  prescriptive provenance DB (§V)
+  sim         synthetic workloads with ground truth
+  jax_ad      on-device distributed AD (PS merge as psum collectives)
+"""
+from . import events, stats, callstack, ad, ps, reduction, provenance, sim  # noqa: F401
+
+__all__ = [
+    "events",
+    "stats",
+    "callstack",
+    "ad",
+    "ps",
+    "reduction",
+    "provenance",
+    "sim",
+]

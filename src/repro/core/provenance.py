@@ -1,0 +1,169 @@
+"""Prescriptive provenance (paper §V).
+
+"Prescriptive provenance is the provenance of events identified as anomalies
+by the distributed AD" — for every anomaly we persist: the anomalous call with
+its rank/thread/entry/exit/runtime/children/messages, its ancestor call stack,
+its communication events, the k surrounding same-function calls, plus static
+run provenance (environment, configuration, mesh).  Output is JSONL (one
+record per anomaly) with an in-memory index for the viz queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import platform
+import sys
+import time
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from .ad import ADFrameResult
+from .events import FunctionRegistry
+from .reduction import select_kept_records
+
+
+def static_provenance(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Static run information (TAU-collected in the paper)."""
+    info = {
+        "timestamp": time.time(),
+        "hostname": platform.node(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "argv": list(sys.argv),
+        "env": {
+            k: v
+            for k, v in os.environ.items()
+            if k.startswith(("XLA_", "JAX_", "REPRO_", "TPU_"))
+        },
+    }
+    try:
+        import jax
+
+        info["jax_version"] = jax.__version__
+        info["device_count"] = jax.device_count()
+        info["backend"] = jax.default_backend()
+    except Exception:  # pragma: no cover - jax always present here
+        pass
+    if extra:
+        info.update(extra)
+    return info
+
+
+def _record_to_dict(rec: np.ndarray, registry: Optional[FunctionRegistry]) -> Dict[str, Any]:
+    d = {name: int(rec[name]) for name in rec.dtype.names}
+    if registry is not None:
+        d["func"] = registry.name_of(int(rec["fid"]))
+        if int(rec["parent_fid"]) >= 0:
+            d["parent_func"] = registry.name_of(int(rec["parent_fid"]))
+    return d
+
+
+class ProvenanceDB:
+    """JSONL-backed anomaly provenance store with in-memory query index."""
+
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        registry: Optional[FunctionRegistry] = None,
+        k_neighbors: int = 5,
+        run_info: Optional[Dict[str, Any]] = None,
+    ):
+        self.path = path
+        self.registry = registry
+        self.k = k_neighbors
+        self.records: List[Dict[str, Any]] = []
+        self._fh: Optional[io.TextIOBase] = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "w")
+            header = {"type": "run_info", **static_provenance(run_info)}
+            self._fh.write(json.dumps(header) + "\n")
+
+    def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
+        """Store provenance for every anomaly in an analyzed frame."""
+        recs = result.records
+        n = 0
+        for idx in result.anomaly_idx:
+            idx = int(idx)
+            anomaly = _record_to_dict(recs[idx], self.registry)
+            # ancestor call stack at detection time (paper Fig. 6 view)
+            stack = [
+                {
+                    "fid": fid,
+                    "func": self.registry.name_of(fid) if self.registry else str(fid),
+                    "entry": ts,
+                    "depth": depth,
+                }
+                for (fid, ts, depth) in result.ctx.ancestors(idx)
+            ]
+            # k same-function neighbors (paper: k normal calls before/after)
+            same = np.nonzero(recs["fid"] == recs["fid"][idx])[0]
+            w = int(np.nonzero(same == idx)[0][0])
+            neigh = same[max(0, w - self.k) : w + self.k + 1]
+            neighbors = [
+                _record_to_dict(recs[j], self.registry) for j in neigh if j != idx
+            ]
+            comms: List[Dict[str, Any]] = []
+            if comm_events is not None and len(comm_events):
+                rows = result.ctx.comm_entry_row
+                sel = np.nonzero(rows >= 0)[0]
+                for j in sel:
+                    ev = comm_events[j]
+                    if (
+                        int(ev["ts"]) >= int(recs["entry"][idx])
+                        and int(ev["ts"]) <= int(recs["exit"][idx])
+                        and int(ev["rank"]) == int(recs["rank"][idx])
+                    ):
+                        comms.append({k2: int(ev[k2]) for k2 in ev.dtype.names})
+            doc = {
+                "type": "anomaly",
+                "step": result.step,
+                "rank": result.rank,
+                "anomaly": anomaly,
+                "call_stack": stack,
+                "neighbors": neighbors,
+                "comm": comms,
+            }
+            self.records.append(doc)
+            if self._fh:
+                self._fh.write(json.dumps(doc) + "\n")
+            n += 1
+        if self._fh:
+            self._fh.flush()
+        return n
+
+    # ----------------------------------------------------------- queries
+    def query(
+        self,
+        rank: Optional[int] = None,
+        fid: Optional[int] = None,
+        step: Optional[int] = None,
+        t0: Optional[int] = None,
+        t1: Optional[int] = None,
+    ) -> List[Dict[str, Any]]:
+        out = []
+        for doc in self.records:
+            a = doc["anomaly"]
+            if rank is not None and doc["rank"] != rank:
+                continue
+            if step is not None and doc["step"] != step:
+                continue
+            if fid is not None and a["fid"] != fid:
+                continue
+            if t0 is not None and a["exit"] < t0:
+                continue
+            if t1 is not None and a["entry"] > t1:
+                continue
+            out.append(doc)
+        return out
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+    def __len__(self) -> int:
+        return len(self.records)

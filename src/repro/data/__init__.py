@@ -1,0 +1,2 @@
+"""Synthetic, deterministic, host-sharded data pipeline."""
+from . import pipeline  # noqa: F401

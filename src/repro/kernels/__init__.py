@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+<name>.py      pl.pallas_call + BlockSpec kernels (TPU target)
+ops.py         jit'd public wrappers (interpret mode on CPU)
+ref.py         pure-jnp oracles for allclose validation
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: flash attention (causal / GQA / sliding-window / softcap).
+
+Online-softmax attention tiled for VMEM: grid (batch·heads, q-blocks,
+kv-blocks) with kv innermost; running (m, l, acc) live in VMEM scratch and
+the output block is flushed on the last kv step.  Covers every attention
+variant the 10 assigned architectures use:
+
+  * GQA/MQA — kv head = q head // group, resolved in the k/v index_map
+  * causal and bidirectional (hubert)
+  * sliding window (danube, gemma2 local layers)
+  * logit softcap (gemma2)
+
+Blocks fully outside the causal/window band are skipped with pl.when —
+the HLO-chunked XLA path (models/layers.attention_chunked) cannot skip
+them, which is exactly the FLOP waste this kernel removes on real TPUs
+(see EXPERIMENTS.md §Perf).
+
+Head-dim is padded to a lane multiple (128) in ops.py; q/k zero-padding
+leaves scores unchanged and v padding is cropped from the output.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int, cap: float,
+    bq: int, bk: int, kv_len: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: entirely outside the causal/window band?
+    q_lo = iq * bq
+    q_hi = q_lo + bq - 1
+    k_lo = ik * bk
+    k_hi = k_lo + bk - 1
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_lo <= q_hi)
+    if window > 0:
+        live = live & (k_hi > q_lo - window)
+    live = live & (k_lo < kv_len)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if cap > 0:
+            s = jnp.tanh(s / cap) * cap
+        ok = kpos < kv_len
+        if causal:
+            ok &= kpos <= qpos
+        if window > 0:
+            ok &= (qpos - kpos) < window
+        s = jnp.where(ok, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        r = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(ok, p, 0.0)
+        l_ref[...] = l_ref[...] * r + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * r[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    kv_len: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kv_len = Sk if kv_len is None else kv_len
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+
+    # (B, S, H, hd) -> (B*H, S, hd) with h-major inside batch
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        bq=bq, bk=bk, kv_len=kv_len,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, iq, ik: (bh // G, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, iq, ik: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

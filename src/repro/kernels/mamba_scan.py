@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: Mamba-1 selective-scan (the sequential hot loop).
+
+XLA handles the projections around the scan well (plain matmuls); what it
+cannot do efficiently is the time recurrence h_t = a_t·h_{t-1} + b_t with
+per-channel state — lowering it as a 1-step lax.scan leaves the MXU idle and
+round-trips h through HBM every step.  This kernel keeps a (bd, st) state
+tile resident in VMEM across the whole sequence: grid (batch, channel-blocks,
+time-chunks) with time innermost, a fori_loop stepping inside each chunk.
+
+Inputs are the precomputed scan elements (ops.py builds them from the conv/
+projection outputs):
+    a (B, S, di, st)   decay   exp(Δt·A)
+    b (B, S, di, st)   drive   Δt·B_t·x_t
+    C (B, S, st)       readout
+Outputs: y (B, S, di) with y_t = C_t·h_t, and h_last (B, di, st).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, c_ref, y_ref, hlast_ref, h_ref, *, Lc: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        at = a_ref[0, t]  # (bd, st)
+        bt = b_ref[0, t]
+        ct = c_ref[0, t]  # (st,)
+        h = at * h + bt
+        y_ref[0, t] = jnp.sum(h * ct[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, Lc, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ic == nc - 1)
+    def _flush():
+        hlast_ref[0] = h
+
+
+def mamba_scan(
+    a: jnp.ndarray,  # (B, S, di, st) f32
+    b: jnp.ndarray,
+    C: jnp.ndarray,  # (B, S, st) f32
+    *,
+    block_d: int = 512,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, di, st = a.shape
+    bd = min(block_d, di)
+    Lc = min(chunk, S)
+    assert di % bd == 0 and S % Lc == 0, (di, bd, S, Lc)
+    kernel = functools.partial(_scan_kernel, Lc=Lc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, di // bd, S // Lc),
+        in_specs=[
+            pl.BlockSpec((1, Lc, bd, st), lambda ib, id_, ic: (ib, ic, id_, 0)),
+            pl.BlockSpec((1, Lc, bd, st), lambda ib, id_, ic: (ib, ic, id_, 0)),
+            pl.BlockSpec((1, Lc, st), lambda ib, id_, ic: (ib, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lc, bd), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, bd, st), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, st), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, st), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32), C.astype(jnp.float32))
+    return y, h_last

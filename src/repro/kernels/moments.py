@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: Chimbuko's AD hot loop (per-function moments + labels).
+
+The paper's on-node AD module folds each trace frame into per-function
+runtime statistics and labels events against μ±ασ (§III-B1).  On TPU the
+segment-reduction is *rethought for the MXU*: instead of scatter/gather
+(slow, serializing on TPU), a block of events becomes a one-hot matrix
+(events × functions) and the statistics are three matmuls on the systolic
+array:
+
+    n_f   = 1ᵀ  · onehot        Σx_f = xᵀ · onehot        Σx²_f = (x²)ᵀ · onehot
+
+Gathers of μ/σ per event for labeling reuse the same one-hot (table read
+back through the MXU).  min/max fall to the VPU via masked reductions.
+
+Grid: 1-D over event blocks; the (F, 5) accumulator table lives in VMEM
+scratch across grid steps and is flushed to the output on the last step.
+Blocks: EB=512 events; F ≤ 2048 functions per table tile (the (EB, F)
+one-hot peaks at 512×2048×4 B = 4 MiB of VMEM).
+
+Padding: fid < 0 marks padding events (weight 0, label 0).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+POS = 1e30
+
+
+def _moments_kernel(
+    fids_ref, durs_ref, table_ref, out_ref, labels_ref, acc_ref,
+    *, alpha: float, min_count: float, F: int,
+):
+    ib = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[:, 3] = jnp.full((F,), POS, jnp.float32)
+        acc_ref[:, 4] = jnp.full((F,), NEG, jnp.float32)
+
+    fids = fids_ref[...]  # (EB,) int32
+    x = durs_ref[...]  # (EB,) f32
+    valid = fids >= 0
+    w = valid.astype(jnp.float32)
+    EB = fids.shape[0]
+
+    # one-hot on the MXU: (EB, F)
+    iota_f = jax.lax.broadcasted_iota(jnp.int32, (EB, F), 1)
+    onehot = (iota_f == fids[:, None]).astype(jnp.float32) * w[:, None]
+
+    # ---- labeling against the PREVIOUS global table (paper semantics) ----
+    tbl = table_ref[...]  # (F, 5): n, sum, sumsq, min, max
+    n_prev = jnp.dot(onehot, tbl[:, 0], preferred_element_type=jnp.float32)
+    s_prev = jnp.dot(onehot, tbl[:, 1], preferred_element_type=jnp.float32)
+    q_prev = jnp.dot(onehot, tbl[:, 2], preferred_element_type=jnp.float32)
+    mu = jnp.where(n_prev > 0, s_prev / jnp.maximum(n_prev, 1.0), 0.0)
+    var = jnp.maximum(
+        jnp.where(n_prev > 1, q_prev / jnp.maximum(n_prev, 1.0) - mu * mu, 0.0), 0.0
+    )
+    sd = jnp.sqrt(var)
+    out = ((x > mu + alpha * sd) | (x < mu - alpha * sd)) & (n_prev >= min_count) & valid
+    labels_ref[...] = out.astype(jnp.int8)
+
+    # ---- moment accumulation (3 MXU matmuls) -----------------------------
+    stacked = jnp.stack([w, x * w, x * x * w], axis=0)  # (3, EB)
+    sums = jnp.dot(stacked, onehot, preferred_element_type=jnp.float32)  # (3, F)
+    masked = jnp.where(onehot > 0, x[:, None], POS)
+    mins = jnp.min(masked, axis=0)
+    masked = jnp.where(onehot > 0, x[:, None], NEG)
+    maxs = jnp.max(masked, axis=0)
+    acc_ref[:, 0] += sums[0]
+    acc_ref[:, 1] += sums[1]
+    acc_ref[:, 2] += sums[2]
+    acc_ref[:, 3] = jnp.minimum(acc_ref[:, 3], mins)
+    acc_ref[:, 4] = jnp.maximum(acc_ref[:, 4], maxs)
+
+    @pl.when(ib == nb - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def moments_and_labels(
+    fids: jnp.ndarray,
+    durs: jnp.ndarray,
+    table_sums: jnp.ndarray,
+    *,
+    alpha: float = 6.0,
+    min_count: float = 10.0,
+    block_events: int = 512,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (delta table (F,5) [n,Σx,Σx²,min,max], labels (N,) int8).
+
+    ``table_sums`` is the previous global table in raw-sums format.
+    """
+    N = fids.shape[0]
+    F = table_sums.shape[0]
+    EB = min(block_events, max(N, 1))
+    pad = (-N) % EB if N else EB
+    if pad:
+        fids = jnp.concatenate([fids, jnp.full((pad,), -1, fids.dtype)])
+        durs = jnp.concatenate([durs, jnp.zeros((pad,), durs.dtype)])
+    nb = fids.shape[0] // EB
+    kernel = functools.partial(
+        _moments_kernel, alpha=alpha, min_count=min_count, F=F
+    )
+    delta, labels = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((EB,), lambda i: (i,)),
+            pl.BlockSpec((EB,), lambda i: (i,)),
+            pl.BlockSpec((F, 5), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((F, 5), lambda i: (0, 0)),
+            pl.BlockSpec((EB,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((F, 5), jnp.float32),
+            jax.ShapeDtypeStruct((N + pad,), jnp.int8),
+        ],
+        scratch_shapes=[pltpu.VMEM((F, 5), jnp.float32)],
+        interpret=interpret,
+    )(fids, durs.astype(jnp.float32), table_sums.astype(jnp.float32))
+    return delta, labels[:N]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def moments_and_labels_ref(
+    fids: jnp.ndarray, durs: jnp.ndarray, table_sums: jnp.ndarray,
+    alpha: float = 6.0, min_count: float = 10.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw-sums delta table + labels (same contract as kernels.moments)."""
+    F = table_sums.shape[0]
+    valid = fids >= 0
+    w = valid.astype(jnp.float32)
+    seg = jnp.clip(fids, 0, F - 1)
+    x = durs.astype(jnp.float32)
+    n = jnp.zeros(F).at[seg].add(w)
+    s = jnp.zeros(F).at[seg].add(w * x)
+    q = jnp.zeros(F).at[seg].add(w * x * x)
+    big = jnp.float32(1e30)
+    mn = jnp.full(F, big).at[seg].min(jnp.where(valid, x, big))
+    mx = jnp.full(F, -big).at[seg].max(jnp.where(valid, x, -big))
+    delta = jnp.stack([n, s, q, mn, mx], axis=-1)
+
+    n_p = table_sums[seg, 0]
+    mu = jnp.where(n_p > 0, table_sums[seg, 1] / jnp.maximum(n_p, 1.0), 0.0)
+    var = jnp.maximum(
+        jnp.where(n_p > 1, table_sums[seg, 2] / jnp.maximum(n_p, 1.0) - mu * mu, 0.0),
+        0.0,
+    )
+    sd = jnp.sqrt(var)
+    lab = ((x > mu + alpha * sd) | (x < mu - alpha * sd)) & (n_p >= min_count) & valid
+    return delta, lab.astype(jnp.int8)
+
+
+def flash_attention_ref(
+    q, k, v, *, causal=True, window=0, cap=0.0, scale=None, kv_len=None
+):
+    """Materialized-softmax GQA attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if cap > 0:
+        s = jnp.tanh(s / cap) * cap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    if kv_len is not None:
+        ok &= kpos < kv_len
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def mamba_scan_ref(a, b, C):
+    """Sequential reference recurrence. a/b (B,S,di,st), C (B,S,st)."""
+    def step(h, inp):
+        at, bt, ct = inp
+        h = at * h + bt
+        return h, jnp.einsum("bds,bs->bd", h, ct)
+
+    B, S, di, st = a.shape
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    xs = (
+        a.astype(jnp.float32).transpose(1, 0, 2, 3),
+        b.astype(jnp.float32).transpose(1, 0, 2, 3),
+        C.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_last

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, shardings, step builders, dryrun, drivers."""

@@ -1,0 +1,183 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms per (arch × shape × mesh):
+
+    compute    = FLOPs_per_device            / peak_FLOPs
+    memory     = HBM bytes_per_device        / HBM_bw
+    collective = ICI bytes_per_device (est.) / ICI_bw
+
+``cost_analysis()`` on an SPMD-partitioned executable reports the
+*per-device* module (verified in tests/test_dryrun.py), so terms divide by
+per-chip rates directly.  Collective bytes are parsed from the partitioned
+HLO; per-device wire estimates use ring factors: all-reduce 2×result,
+all-gather/reduce-scatter/all-to-all/collective-permute 1×result
+(each ×(n−1)/n ≈ 1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+HW = {
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# result-bytes -> wire-bytes ring estimate
+_WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-type {count, result_bytes, wire_bytes} from partitioned HLO."""
+    out = {op: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0} for op in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op, _start = m.group(1), m.group(2), m.group(3)
+        b = _type_bytes(type_str)
+        out[op]["count"] += 1
+        out[op]["result_bytes"] += b
+        out[op]["wire_bytes"] += b * _WIRE_FACTOR[op]
+    return out
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    wire_bytes_per_device: float,
+) -> Dict[str, float]:
+    compute = flops_per_device / HW["peak_flops"]
+    memory = hbm_bytes_per_device / HW["hbm_bw"]
+    collective = wire_bytes_per_device / HW["ici_bw"]
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "step_time_lower_bound_s": bound,
+        # fraction of roofline achieved if the dominant term were the step
+        # time: useful-work share of the bound
+        "compute_fraction_of_bound": compute / bound if bound > 0 else 0.0,
+    }
+
+
+def attn_scores_traffic(
+    cfg, mode: str, batch: int, seq: int, devices: int
+) -> float:
+    """Per-device HBM bytes the PROBE's direct-attention path spends on
+    materialized (Sq, Sk) score tensors — traffic the Pallas flash kernel
+    keeps in VMEM on real TPUs.  memory_term_kernel = (probe_bytes − this)/BW.
+
+    Model: per attention layer, scores+probs ≈ 4 HBM accesses of
+    B×H×Sq×Sk fp32 in forward; training triples it (fwd + remat-fwd + bwd).
+    """
+    tp = 16
+    dp = devices // tp
+    n_full = sum(1 for s in cfg.layout if s.mixer in ("full", "mla")) * (
+        cfg.n_layers // max(len(cfg.layout), 1)
+    )
+    n_swa = sum(1 for s in cfg.layout if s.mixer == "swa") * (
+        cfg.n_layers // max(len(cfg.layout), 1)
+    )
+    H = max(cfg.n_heads, 1)
+    H_loc = H // tp if H % tp == 0 else H
+    B_loc = max(batch // dp, 1)
+    Sq = 1 if mode == "decode" else seq
+    Sk = seq
+    full_elems = n_full * B_loc * H_loc * Sq * Sk
+    swa_elems = n_swa * B_loc * H_loc * Sq * min(Sk, cfg.window)
+    phases = 3.0 if mode == "train" else 1.0
+    return (full_elems + swa_elems) * 4.0 * 4.0 * phases
+
+
+def analytic_memory_floor(
+    cfg, mode: str, batch: int, seq: int, devices: int, microbatch: int = 1
+) -> float:
+    """Per-device HBM bytes/step assuming perfect fusion (lower bound).
+
+    Terms (documented constants):
+      optimizer     32·N/devices      fp32 read+write of p, m, v + grad r/w
+      weight reads  passes·2·Na/tp·mb bf16 weights re-read per microbatch;
+                    passes = 3 for train (fwd + remat-fwd + bwd), 1 otherwise
+      activations   12·tokens_dev·d·2·passes   ~6 intermediates r+w per layer
+                    … × n_layers
+      kv/ssm cache  full cache r+w for decode; write-only for prefill
+    """
+    tp = 16
+    dp = max(devices // tp, 1)
+    N, Na = cfg.n_params(), cfg.n_active_params()
+    d = cfg.d_model
+    L = cfg.n_layers
+    passes = 3.0 if mode == "train" else 1.0
+    toks_dev = (batch * seq) / dp if mode != "decode" else batch / max(dp, 1)
+    total = 0.0
+    if mode == "train":
+        total += 32.0 * N / devices
+        total += passes * 2.0 * Na / tp * max(microbatch, 1)
+    else:
+        total += 2.0 * Na / tp
+    # per-layer activation traffic: ~6 intermediates, read+write, × L layers
+    total += 12.0 * toks_dev * d * 2.0 * passes * L
+    # decode cache traffic (read K+V per step; mamba state tiny)
+    if mode == "decode":
+        cache = 0.0
+        NP = cfg.n_periods
+        for spec_ in cfg.layout:
+            if spec_.mixer in ("full", "swa"):
+                Sc = min(seq, cfg.window) if spec_.mixer == "swa" else seq
+                cache += 2 * batch * Sc * cfg.n_kv_heads * cfg.head_dim * 2
+            elif spec_.mixer == "mla":
+                cache += batch * seq * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+            elif spec_.mixer == "mamba":
+                cache += batch * cfg.d_inner * cfg.ssm_d_state * 4
+        total += cache * NP / devices * tp  # cache sharded over model+batch axes
+    return total
+
+
+def model_flops(cfg, mode: str, batch: int, seq: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill), 2·N_active·batch (decode, one token)."""
+    n = cfg.n_active_params()
+    if mode == "train":
+        return 6.0 * n * batch * seq
+    if mode == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch

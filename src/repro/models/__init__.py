@@ -1,0 +1,2 @@
+"""Model zoo: unified period-layout transformer/SSM/MoE/hybrid stack."""
+from . import common, layers, mamba, moe, model  # noqa: F401

@@ -1,0 +1,770 @@
+"""Unified model assembly: one scan-over-periods stack drives all 10 archs.
+
+Modes:
+  forward / loss_and_metrics  — full-sequence training path
+  prefill                     — sequence pass that also builds the KV/SSM cache
+  decode_step                 — single-token step against the cache
+
+The cache is stacked over periods per layout position, so decode is also a
+single lax.scan (compile-size friendly at 512 devices).  Ring buffers handle
+SWA windows; MLA caches the compressed latent (its whole point); mamba keeps
+O(1) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .common import DENSE, FULL, MAMBA, MLA, MOE, NONE, SWA, LayerSpec, ModelConfig
+from .mamba import init_mamba_state, mamba_decode, mamba_sequence
+from .moe import EPInfo, moe_block
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """How the current step is distributed (None mesh = single device)."""
+
+    mesh: Optional[Any] = None
+    batch_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = "model"
+    batch_shardable: bool = True  # False for global_batch=1 cells
+    seq_shard: bool = False  # sequence-parallel activations (small-head archs)
+    remat: str = "none"  # none | block
+    # probe mode (dryrun cost accounting): unroll every scan so XLA
+    # cost_analysis — which counts loop bodies ONCE — sees all the work.
+    unroll: bool = False
+
+    @property
+    def scan_unroll(self):
+        return True if self.unroll else 1
+
+    @property
+    def token_pspec(self) -> P:
+        b = self.batch_axes if (self.mesh is not None and self.batch_shardable) else None
+        return P(b)
+
+    def constrain(self, x: jnp.ndarray, spec: P) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+    def hidden_spec(self) -> P:
+        b = self.batch_axes if self.batch_shardable else None
+        s = self.model_axis if self.seq_shard else None
+        return P(b, s, None)
+
+    def ep_info(self, cfg: ModelConfig) -> Optional[EPInfo]:
+        if self.mesh is None or self.model_axis is None:
+            return None
+        n = self.mesh.shape[self.model_axis]
+        if cfg.moe_experts % n != 0:
+            return None
+        return EPInfo(axis=self.model_axis, n_shards=n)
+
+
+# ---------------------------------------------------------------- embedding
+def embed_tokens(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    if cfg.modality == "audio_stub":
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
+        if cfg.modality == "vision_stub" and "visual_embeds" in batch:
+            vis = batch["visual_embeds"].astype(cfg.compute_dtype)
+            n_vis = vis.shape[1]
+            x = jnp.concatenate([vis, x[:, n_vis:]], axis=1)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return x
+
+
+def _positions(cfg: ModelConfig, batch, B: int, S: int, offset=0) -> jnp.ndarray:
+    if cfg.pos == "mrope":
+        if "pos3" in batch:
+            return batch["pos3"]
+        return L.mrope_text_positions(B, S, offset)
+    return L.text_positions(B, S, offset)
+
+
+def _rope_cos_sin(cfg: ModelConfig, positions, dim: int):
+    if cfg.pos == "mrope":
+        return L.mrope_cos_sin(positions, dim, cfg.mrope_sections, cfg.rope_theta)
+    if cfg.pos == "none":
+        return None, None
+    return L.rope_cos_sin(positions, dim, cfg.rope_theta)
+
+
+def unembed(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(cfg.compute_dtype)
+    else:
+        logits = x @ params["unembed"].astype(cfg.compute_dtype)
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab:  # mask the padding columns exactly
+        pad_ok = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_ok, logits, L.NEG_INF)
+    return logits
+
+
+# ----------------------------------------------------------------- blocks
+_F32_KEYS = frozenset({"A_log"})  # kept f32: used only inside f32 math
+
+
+def _cast_block_params(p: Dict[str, jnp.ndarray], dtype) -> Dict[str, jnp.ndarray]:
+    """bf16 compute casts of the fp32 master weights (mixed precision)."""
+    return {k: (v if k in _F32_KEYS else v.astype(dtype)) for k, v in p.items()}
+
+
+def _attention_seq_parallel(
+    q, k, v, ctx: ShardCtx, *, causal, window, cap, scale=None
+) -> jnp.ndarray:
+    """Context-parallel attention: queries stay sequence-sharded over the
+    model axis, K/V are all-gathered (tiny vs. S² scores), each shard
+    computes its causal slice with a global query offset.
+
+    Replaces XLA's default for unshardable-head archs — contraction
+    sharding over head_dim, which all-reduces fp32 (Sq, Sk) score tensors
+    (measured 2–3 GB/layer at train_4k; EXPERIMENTS.md §Perf)."""
+    B, S, H, hd = q.shape
+    tp = ctx.mesh.shape[ctx.model_axis]
+    S_loc = S // tp
+    b = ctx.batch_axes if ctx.batch_shardable else None
+    m_ax = ctx.model_axis
+
+    # probe mode: single-block chunks -> the internal scans have length 1,
+    # so cost_analysis counts the attention exactly without unrolling
+    cq = S_loc if ctx.unroll else min(512, S_loc)
+    ck = S if ctx.unroll else min(1024, S)
+
+    def f(qr, kr, vr):
+        kf = jax.lax.all_gather(kr, m_ax, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vr, m_ax, axis=1, tiled=True)
+        off = jax.lax.axis_index(m_ax) * S_loc
+        return L.attention_chunked(
+            qr, kf, vf, causal=causal, window=window, cap=cap, scale=scale,
+            q_offset=off, chunk_q=cq, chunk_k=ck,
+        )
+
+    fn = jax.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(b, m_ax, None, None), P(b, m_ax, None, None), P(b, m_ax, None, None),
+        ),
+        out_specs=P(b, m_ax, None, None),
+        check_vma=False,
+    )
+    return fn(q, k, v)
+
+
+def _use_seq_parallel(ctx: ShardCtx, S: int) -> bool:
+    return (
+        ctx.seq_shard
+        and ctx.mesh is not None
+        and ctx.model_axis in getattr(ctx.mesh, "axis_names", ())
+        and S % ctx.mesh.shape[ctx.model_axis] == 0
+        and S >= ctx.mesh.shape[ctx.model_axis] * 16
+    )
+
+
+def _attn_seq(cfg, spec, p, h, cos, sin, ctx: ShardCtx) -> jnp.ndarray:
+    B, S, D = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, KV, hd)
+    v = (h @ p["wv"]).reshape(B, S, KV, hd)
+    if cos is not None:
+        q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    window = cfg.window if spec.mixer == SWA else 0
+    if _use_seq_parallel(ctx, S):
+        out = _attention_seq_parallel(
+            q, k, v, ctx, causal=cfg.causal, window=window, cap=cfg.attn_softcap
+        )
+        return out.reshape(B, S, H * hd) @ p["wo"]
+    if ctx.mesh is not None and ctx.model_axis and not ctx.seq_shard:
+        tp = ctx.mesh.shape[ctx.model_axis]
+        b = ctx.batch_axes if ctx.batch_shardable else None
+        if H % tp == 0:
+            q = ctx.constrain(q, P(b, None, ctx.model_axis, None))
+        if KV % tp == 0:
+            k = ctx.constrain(k, P(b, None, ctx.model_axis, None))
+            v = ctx.constrain(v, P(b, None, ctx.model_axis, None))
+    out = L.attention(
+        q, k, v, causal=cfg.causal, window=window, cap=cfg.attn_softcap,
+        direct_threshold=(1 << 30) if ctx.unroll else 1024,
+    )
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def _attn_seq_with_cache(cfg, spec, p, h, cos, sin, ctx):
+    """Prefill: returns (attn_out, (k_full, v_full))."""
+    B, S, D = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, KV, hd)
+    v = (h @ p["wv"]).reshape(B, S, KV, hd)
+    if cos is not None:
+        q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    window = cfg.window if spec.mixer == SWA else 0
+    out = L.attention(q, k, v, causal=cfg.causal, window=window, cap=cfg.attn_softcap,
+                      direct_threshold=(1 << 30) if ctx.unroll else 1024)
+    return out.reshape(B, S, H * hd) @ p["wo"], (k, v)
+
+
+def _mla_seq(cfg, spec, p, h, cos, sin, ctx, with_cache=False):
+    B, S, D = h.shape
+    H = cfg.n_heads
+    nope, rope, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = L.rms_norm(h @ p["wdq"], p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = h @ p["wdkv"]  # (B,S,kvr+rope)
+    ckv = L.rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = dkv[..., cfg.kv_lora_rank :].reshape(B, S, 1, rope)
+    if cos is not None:
+        cr, sr = cos[..., : rope // 2], sin[..., : rope // 2]
+        q_rope = L.apply_rope(q_rope, cr, sr)
+        k_rope = L.apply_rope(k_rope, cr, sr)
+    k_nope = (ckv @ p["wuk"]).reshape(B, S, H, nope)
+    v = (ckv @ p["wuv"]).reshape(B, S, H, vh)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = 1.0 / math.sqrt(nope + rope)
+    if _use_seq_parallel(ctx, S):
+        out = _attention_seq_parallel(
+            q, k, v, ctx, causal=cfg.causal, window=0, cap=cfg.attn_softcap,
+            scale=scale,
+        )
+    else:
+        out = L.attention(q, k, v, causal=cfg.causal, window=0, cap=cfg.attn_softcap,
+                          scale=scale,
+                          direct_threshold=(1 << 30) if ctx.unroll else 1024)
+    out = out.reshape(B, S, H * vh) @ p["wo"]
+    if with_cache:
+        return out, (ckv, k_rope[:, :, 0, :])
+    return out
+
+
+def _mlp_apply(cfg, spec, p, h, ctx: ShardCtx):
+    if spec.mlp == MOE:
+        ep = ctx.ep_info(cfg)
+        if ep is not None:
+            fn = jax.shard_map(
+                lambda pr, xr: moe_block(pr, xr, cfg, ep),
+                mesh=ctx.mesh,
+                in_specs=(
+                    {
+                        "router": P(),
+                        "moe_gate": P(ctx.model_axis),
+                        "moe_up": P(ctx.model_axis),
+                        "moe_down": P(ctx.model_axis),
+                    },
+                    P(*ctx.token_pspec, None, None),
+                ),
+                out_specs=P(*ctx.token_pspec, None, None),
+            )
+            sub = {k2: p[k2] for k2 in ("router", "moe_gate", "moe_up", "moe_down")}
+            return fn(sub, h)
+        return moe_block(
+            {k2: p[k2] for k2 in ("router", "moe_gate", "moe_up", "moe_down")},
+            h, cfg, None,
+        )
+    return L.mlp(p, h, cfg.activation)
+
+
+def apply_block(cfg, spec: LayerSpec, p, x, cos, sin, ctx: ShardCtx) -> jnp.ndarray:
+    p = _cast_block_params(p, cfg.compute_dtype)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == MAMBA:
+        if _use_seq_parallel(ctx, x.shape[1]):
+            from .mamba import mamba_mixer_seq_parallel
+
+            S_loc = x.shape[1] // ctx.mesh.shape[ctx.model_axis]
+            h = mamba_mixer_seq_parallel(
+                p, h, cfg, ctx, chunk=(S_loc if ctx.unroll else min(128, S_loc))
+            )
+        else:
+            h = mamba_sequence(p, h, cfg, chunk=(x.shape[1] if ctx.unroll else 128))
+    elif spec.mixer == MLA:
+        h = _mla_seq(cfg, spec, p, h, cos, sin, ctx)
+    else:
+        h = _attn_seq(cfg, spec, p, h, cos, sin, ctx)
+    if cfg.sandwich_norm:
+        h = L.rms_norm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+    x = ctx.constrain(x, ctx.hidden_spec())
+    if spec.mlp != NONE:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        h = _mlp_apply(cfg, spec, p, h, ctx)
+        if cfg.sandwich_norm:
+            h = L.rms_norm(h, p["post_ln2"], cfg.norm_eps)
+        x = x + h
+        x = ctx.constrain(x, ctx.hidden_spec())
+    return x
+
+
+# ----------------------------------------------------------------- forward
+def hidden_states(cfg: ModelConfig, params, batch, ctx: ShardCtx = ShardCtx()) -> jnp.ndarray:
+    x = embed_tokens(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, batch, B, S)
+    cos, sin = _rope_cos_sin(cfg, positions, cfg.qk_dim)
+    x = ctx.constrain(x, ctx.hidden_spec())
+
+    def body(xc, period_params):
+        for pos, spec in enumerate(cfg.layout):
+            if ctx.remat == "block" and cfg.period > 1:
+                # nested remat: multi-layer periods (jamba: 8 layers) would
+                # otherwise hold the whole period's intermediates in the
+                # backward working set (measured 25 GiB of temps at 52B)
+                blk = jax.checkpoint(
+                    lambda pp, xx, s=spec: apply_block(cfg, s, pp, xx, cos, sin, ctx)
+                )
+                xc = blk(period_params[pos], xc)
+            else:
+                xc = apply_block(cfg, spec, period_params[pos], xc, cos, sin, ctx)
+        return xc, None
+
+    if ctx.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=ctx.scan_unroll)
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: ShardCtx = ShardCtx()) -> jnp.ndarray:
+    logits = unembed(cfg, params, hidden_states(cfg, params, batch, ctx))
+    return logits[..., : cfg.vocab]  # crop padding (API surface only)
+
+
+def loss_and_metrics(
+    cfg: ModelConfig, params, batch, ctx: ShardCtx = ShardCtx(), ce_chunk: int = 1024
+):
+    """Next-token CE with sequence-chunked unembedding.
+
+    Full logits of a 256k-vocab model are (B·S·V) — tens of GB per device at
+    train_4k.  Chunking the unembed+CE over the sequence (with remat) keeps
+    live logits at (B, chunk, V); the backward pass recomputes each chunk's
+    logits from the final hidden states.
+    """
+    x = hidden_states(cfg, params, batch, ctx)
+    B, S, _ = x.shape
+    labels = batch["labels"]
+    cs = min(ce_chunk, S)
+    if S % cs != 0:
+        cs = S  # fall back to unchunked
+    nc = S // cs
+    xr = x.reshape(B, nc, cs, -1).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, nc, cs).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        xc, lc = inp
+        logits = unembed(cfg, params, xc)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tl = -jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        hit = ((logits.argmax(-1) == lc) * mask).sum()
+        lsum, msum, hsum = carry
+        return (lsum + (tl * mask).sum(), msum + mask.sum(), hsum + hit), None
+
+    (lsum, msum, hits), _ = jax.lax.scan(
+        chunk, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (xr, lr),
+        unroll=ctx.scan_unroll,
+    )
+    loss = lsum / jnp.maximum(msum, 1.0)
+    return loss, {"loss": loss, "accuracy": hits / jnp.maximum(msum, 1.0), "tokens": msum}
+
+
+# ------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Zeroed decode cache; stacked over periods per layout position."""
+    NP = cfg.n_periods
+    dt = cfg.compute_dtype
+    per_pos: List[Dict[str, jnp.ndarray]] = []
+    for spec in cfg.layout:
+        if spec.mixer == MAMBA:
+            c = {
+                "h": jnp.zeros((NP, batch, cfg.d_inner, cfg.ssm_d_state), jnp.float32),
+                "conv": jnp.zeros((NP, batch, cfg.ssm_d_conv - 1, cfg.d_inner), dt),
+            }
+        elif spec.mixer == MLA:
+            c = {
+                "ckv": jnp.zeros((NP, batch, max_seq, cfg.kv_lora_rank), dt),
+                "krope": jnp.zeros((NP, batch, max_seq, cfg.qk_rope_dim), dt),
+            }
+        else:
+            Sc = min(max_seq, cfg.window) if spec.mixer == SWA else max_seq
+            c = {
+                "k": jnp.zeros((NP, batch, Sc, cfg.n_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((NP, batch, Sc, cfg.n_kv_heads, cfg.head_dim), dt),
+                "kpos": jnp.full((NP, Sc), -1, jnp.int32),
+            }
+        per_pos.append(c)
+    return {"pos": jnp.zeros((), jnp.int32), "layers": per_pos}
+
+
+def _attn_decode(cfg, spec, p, h, cache, pos, cos, sin, ctx):
+    """One-token attention against (possibly ring-buffered) cache."""
+    B = h.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, 1, H, hd)
+    k = (h @ p["wk"]).reshape(B, 1, KV, hd)
+    v = (h @ p["wv"]).reshape(B, 1, KV, hd)
+    if cos is not None:
+        q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    Sc = cache["k"].shape[1]  # cache slice inside scan: (B, Sc, KV, hd)
+    slot = pos % Sc  # ring for SWA; plain index otherwise (pos < Sc)
+    ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, axis=1)
+    cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, axis=1)
+    kpos = jax.lax.dynamic_update_index_in_dim(cache["kpos"], pos, slot, axis=0)
+    window = cfg.window if spec.mixer == SWA else 0
+    acc, m, l = L.attention_partial(
+        q, ck, cv, causal=True, window=window, cap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(hd),
+        qpos=jnp.full((1, 1), pos), kpos=kpos[None, :],
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,1,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd).astype(h.dtype)
+    return out @ p["wo"], {"k": ck, "v": cv, "kpos": kpos}
+
+
+def _seq_sharded(ctx: ShardCtx, Sc: int) -> bool:
+    """Is the decode cache sequence-sharded over the model axis?"""
+    return (
+        ctx.mesh is not None
+        and ctx.model_axis in getattr(ctx.mesh, "axis_names", ())
+        and Sc % ctx.mesh.shape[ctx.model_axis] == 0
+        and Sc >= ctx.mesh.shape[ctx.model_axis]
+    )
+
+
+def _attn_decode_sharded(cfg, spec, p, q, k_new, v_new, cache, pos, ctx):
+    """Flash-decode over a sequence-sharded KV cache: every model shard
+    attends to its cache slice, partial softmaxes merge with one
+    pmax + two psums (the same merge pattern as the Chimbuko PS merge)."""
+    B = q.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.window if spec.mixer == SWA else 0
+    Sc = cache["k"].shape[1]
+    slot = pos % Sc
+    b = ctx.batch_axes if ctx.batch_shardable else None
+    m_ax = ctx.model_axis
+
+    def f(qr, knr, vnr, kc, vc, kposc, slotr, posr):
+        i = jax.lax.axis_index(m_ax)
+        Sc_loc = kc.shape[1]
+        rel = slotr - i * Sc_loc
+        owned = (rel >= 0) & (rel < Sc_loc)
+        relc = jnp.clip(rel, 0, Sc_loc - 1)
+        old_k = jax.lax.dynamic_index_in_dim(kc, relc, 1, keepdims=False)
+        old_v = jax.lax.dynamic_index_in_dim(vc, relc, 1, keepdims=False)
+        kc = jax.lax.dynamic_update_index_in_dim(
+            kc, jnp.where(owned, knr[:, 0], old_k), relc, axis=1
+        )
+        vc = jax.lax.dynamic_update_index_in_dim(
+            vc, jnp.where(owned, vnr[:, 0], old_v), relc, axis=1
+        )
+        kposc = jax.lax.dynamic_update_index_in_dim(
+            kposc, jnp.where(owned, posr, kposc[relc]), relc, axis=0
+        )
+        acc, m, l = L.attention_partial(
+            qr, kc, vc, causal=True, window=window, cap=cfg.attn_softcap,
+            scale=1.0 / math.sqrt(hd),
+            qpos=jnp.full((1, 1), posr), kpos=kposc[None, :],
+        )
+        m_g = jax.lax.pmax(m, m_ax)
+        r = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * r, m_ax)
+        acc_g = jax.lax.psum(acc * r[..., None], m_ax)
+        out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B // (1 if b is None else _prod(ctx.mesh, b)), 1, H * hd)
+        return out.astype(qr.dtype), kc, vc, kposc
+
+    fn = jax.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(b, None, None, None), P(b, None, None, None), P(b, None, None, None),
+            P(b, m_ax, None, None), P(b, m_ax, None, None), P(m_ax), P(), P(),
+        ),
+        out_specs=(
+            P(b, None, None), P(b, m_ax, None, None), P(b, m_ax, None, None), P(m_ax),
+        ),
+    )
+    out, ck, cv, kpos = fn(q, k_new, v_new, cache["k"], cache["v"], cache["kpos"], slot, pos)
+    return out, {"k": ck, "v": cv, "kpos": kpos}
+
+
+def _prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _mla_decode_sharded(cfg, p, q_eff, q_rope, ckv_new, krope_new, cache, pos, ctx):
+    """Absorbed-MLA flash-decode over the sequence-sharded latent cache."""
+    B = q_eff.shape[0]
+    H = cfg.n_heads
+    kvr, vh = cfg.kv_lora_rank, cfg.v_head_dim
+    b = ctx.batch_axes if ctx.batch_shardable else None
+    m_ax = ctx.model_axis
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    def f(qe, qr_, cn, kn, cc, kc, posr):
+        i = jax.lax.axis_index(m_ax)
+        Sc_loc = cc.shape[1]
+        rel = posr - i * Sc_loc  # MLA slots == positions (no ring)
+        owned = (rel >= 0) & (rel < Sc_loc)
+        relc = jnp.clip(rel, 0, Sc_loc - 1)
+        old_c = jax.lax.dynamic_index_in_dim(cc, relc, 1, keepdims=False)
+        old_k = jax.lax.dynamic_index_in_dim(kc, relc, 1, keepdims=False)
+        cc = jax.lax.dynamic_update_index_in_dim(
+            cc, jnp.where(owned, cn[:, 0], old_c), relc, axis=1
+        )
+        kc = jax.lax.dynamic_update_index_in_dim(
+            kc, jnp.where(owned, kn[:, 0, 0], old_k), relc, axis=1
+        )
+        s = jnp.einsum("bqhk,bsk->bhqs", qe.astype(jnp.float32), cc.astype(jnp.float32))
+        s += jnp.einsum("bqhr,bsr->bhqs", qr_.astype(jnp.float32), kc.astype(jnp.float32))
+        s *= scale
+        s = L.softcap(s, cfg.attn_softcap)
+        valid = (i * Sc_loc + jnp.arange(Sc_loc))[None, None, None, :] <= posr
+        s = jnp.where(valid, s, L.NEG_INF)
+        m = s.max(-1)
+        pvals = jnp.where((m <= L.NEG_INF / 2)[..., None], 0.0, jnp.exp(s - m[..., None]))
+        l = pvals.sum(-1)
+        acc = jnp.einsum("bhqs,bsk->bhqk", pvals, cc.astype(jnp.float32))
+        m_g = jax.lax.pmax(m, m_ax)
+        r = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * r, m_ax)
+        acc_g = jax.lax.psum(acc * r[..., None], m_ax)
+        lat = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+        return lat, cc, kc
+
+    fn = jax.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(b, None, None, None), P(b, None, None, None),
+            P(b, None, None), P(b, None, None, None),
+            P(b, m_ax, None), P(b, m_ax, None), P(),
+        ),
+        out_specs=(P(b, None, None, None), P(b, m_ax, None), P(b, m_ax, None)),
+    )
+    lat, ckv, krope = fn(
+        q_eff, q_rope, ckv_new, krope_new, cache["ckv"], cache["krope"], pos
+    )
+    return lat, {"ckv": ckv, "krope": krope}
+
+
+def _mla_decode(cfg, spec, p, h, cache, pos, cos, sin, ctx):
+    """Absorbed-matrix MLA decode on the compressed latent cache."""
+    B = h.shape[0]
+    H = cfg.n_heads
+    nope, rope, vh, kvr = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    cq = L.rms_norm(h @ p["wdq"], p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(B, 1, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = h @ p["wdkv"]
+    ckv_new = L.rms_norm(dkv[..., :kvr], p["kv_ln"], cfg.norm_eps)  # (B,1,kvr)
+    krope_new = dkv[..., kvr:].reshape(B, 1, 1, rope)
+    if cos is not None:
+        cr, sr = cos[..., : rope // 2], sin[..., : rope // 2]
+        q_rope = L.apply_rope(q_rope, cr, sr)
+        krope_new = L.apply_rope(krope_new, cr, sr)
+    ckv = jax.lax.dynamic_update_index_in_dim(cache["ckv"], ckv_new[:, 0], pos, axis=1)
+    krope = jax.lax.dynamic_update_index_in_dim(
+        cache["krope"], krope_new[:, 0, 0], pos, axis=1
+    )
+    # absorb W_uk into q:  q_eff (B,1,H,kvr)
+    wuk = p["wuk"].reshape(kvr, H, nope)
+    q_eff = jnp.einsum("bqhn,khn->bqhk", q_nope, wuk)
+    scores = jnp.einsum("bqhk,bsk->bhqs", q_eff.astype(jnp.float32), ckv.astype(jnp.float32))
+    scores += jnp.einsum(
+        "bqhr,bsr->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32)
+    )
+    scores *= 1.0 / math.sqrt(nope + rope)
+    scores = L.softcap(scores, cfg.attn_softcap)
+    Sc = ckv.shape[1]
+    valid = jnp.arange(Sc)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, L.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhqs,bsk->bqhk", probs, ckv.astype(jnp.float32))  # (B,1,H,kvr)
+    wuv = p["wuv"].reshape(kvr, H, vh)
+    out = jnp.einsum("bqhk,khv->bqhv", lat, wuv).reshape(B, 1, H * vh).astype(h.dtype)
+    return out @ p["wo"], {"ckv": ckv, "krope": krope}
+
+
+def decode_block(cfg, spec, p, x, cache, pos, cos, sin, ctx):
+    p = _cast_block_params(p, cfg.compute_dtype)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == MAMBA:
+        h, new_cache = mamba_decode(p, h, cache, cfg)
+    elif spec.mixer == MLA:
+        h, new_cache = _mla_decode(cfg, spec, p, h, cache, pos, cos, sin, ctx)
+    else:
+        h, new_cache = _attn_decode(cfg, spec, p, h, cache, pos, cos, sin, ctx)
+    if cfg.sandwich_norm:
+        h = L.rms_norm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+    if spec.mlp != NONE:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        h = _mlp_apply(cfg, spec, p, h, ctx)
+        if cfg.sandwich_norm:
+            h = L.rms_norm(h, p["post_ln2"], cfg.norm_eps)
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig, params, cache, tokens: jnp.ndarray, ctx: ShardCtx = ShardCtx()
+):
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, {"tokens": tokens})
+    B = x.shape[0]
+    positions = (
+        jnp.broadcast_to(pos, (3, B, 1)) if cfg.pos == "mrope"
+        else jnp.full((B, 1), pos)
+    )
+    cos, sin = _rope_cos_sin(cfg, positions, cfg.qk_dim)
+
+    def body(xc, slices):
+        period_params, period_cache = slices
+        new_caches = []
+        for i, spec in enumerate(cfg.layout):
+            xc, nc = decode_block(
+                cfg, spec, period_params[i], xc, period_cache[i], pos, cos, sin, ctx
+            )
+            new_caches.append(nc)
+        return xc, new_caches
+
+    x, new_layer_cache = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"]), unroll=ctx.scan_unroll
+    )
+    logits = unembed(cfg, params, x)
+    return logits, {"pos": pos + 1, "layers": new_layer_cache}
+
+
+def _expand_prefill_cache(cfg: ModelConfig, layer_caches, S: int, max_seq: int):
+    """Grow prefill caches to max_seq decode slots, ring-aligned for SWA."""
+    out = []
+    for spec, c in zip(cfg.layout, layer_caches):
+        if spec.mixer == MAMBA:
+            out.append(c)
+            continue
+        if spec.mixer == MLA:
+            pad = max_seq - c["ckv"].shape[2]
+            if pad > 0:
+                c = {
+                    "ckv": jnp.pad(c["ckv"], ((0, 0), (0, 0), (0, pad), (0, 0))),
+                    "krope": jnp.pad(c["krope"], ((0, 0), (0, 0), (0, pad), (0, 0))),
+                }
+            out.append(c)
+            continue
+        w = c["k"].shape[2]  # stored length after prefill
+        Sc = min(max_seq, cfg.window) if spec.mixer == SWA else max_seq
+        if Sc == w:
+            if S > w:  # ring-align: position p must live in slot p % w
+                sh = S % w
+                c = {
+                    "k": jnp.roll(c["k"], sh, axis=2),
+                    "v": jnp.roll(c["v"], sh, axis=2),
+                    "kpos": jnp.roll(c["kpos"], sh, axis=1),
+                }
+        else:
+            assert Sc > w, (Sc, w)
+            NP, B = c["k"].shape[0], c["k"].shape[1]
+            KV, hd = c["k"].shape[3], c["k"].shape[4]
+            k = jnp.zeros((NP, B, Sc, KV, hd), c["k"].dtype)
+            v = jnp.zeros((NP, B, Sc, KV, hd), c["v"].dtype)
+            kpos = jnp.full((NP, Sc), -1, jnp.int32)
+            off = S - w  # slots == positions (no wrap: S <= Sc here)
+            c = {
+                "k": jax.lax.dynamic_update_slice(k, c["k"], (0, 0, off, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(v, c["v"], (0, 0, off, 0, 0)),
+                "kpos": jax.lax.dynamic_update_slice(kpos, c["kpos"], (0, off)),
+            }
+        out.append(c)
+    return out
+
+
+def prefill(
+    cfg: ModelConfig, params, batch, ctx: ShardCtx = ShardCtx(),
+    max_seq: Optional[int] = None,
+):
+    """Sequence pass returning (last-position logits, populated cache)."""
+    x = embed_tokens(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, batch, B, S)
+    cos, sin = _rope_cos_sin(cfg, positions, cfg.qk_dim)
+    x = ctx.constrain(x, ctx.hidden_spec())
+
+    def body(xc, period_params):
+        caches = []
+        for i, spec in enumerate(cfg.layout):
+            p = _cast_block_params(period_params[i], cfg.compute_dtype)
+            h = L.rms_norm(xc, p["ln1"], cfg.norm_eps)
+            if spec.mixer == MAMBA:
+                # full-sequence mixer; rebuild final state for the cache
+                hh = mamba_sequence(p, h, cfg, chunk=(h.shape[1] if ctx.unroll else 128))
+                cch = _mamba_prefill_state(cfg, p, h)
+                h = hh
+            elif spec.mixer == MLA:
+                h, (ckv, krope) = _mla_seq(cfg, spec, p, h, cos, sin, ctx, with_cache=True)
+                cch = {"ckv": ckv, "krope": krope}
+            else:
+                h, (k, v) = _attn_seq_with_cache(cfg, spec, p, h, cos, sin, ctx)
+                if spec.mixer == SWA:
+                    w = min(cfg.window, S)
+                    k, v = k[:, -w:], v[:, -w:]
+                    kpos = jnp.arange(S - w, S, dtype=jnp.int32)
+                else:
+                    kpos = jnp.arange(S, dtype=jnp.int32)
+                cch = {"k": k, "v": v, "kpos": kpos}
+            if cfg.sandwich_norm:
+                h = L.rms_norm(h, p["post_ln1"], cfg.norm_eps)
+            xc = xc + h
+            if spec.mlp != NONE:
+                h = L.rms_norm(xc, p["ln2"], cfg.norm_eps)
+                h = _mlp_apply(cfg, spec, p, h, ctx)
+                if cfg.sandwich_norm:
+                    h = L.rms_norm(h, p["post_ln2"], cfg.norm_eps)
+                xc = xc + h
+            xc = ctx.constrain(xc, ctx.hidden_spec())
+            caches.append(cch)
+        return xc, caches
+
+    if ctx.remat == "block":
+        body = jax.checkpoint(body)
+    x, layer_caches = jax.lax.scan(body, x, params["layers"], unroll=ctx.scan_unroll)
+    logits = unembed(cfg, params, x[:, -1:])
+    if max_seq is not None and max_seq != S:
+        layer_caches = _expand_prefill_cache(cfg, layer_caches, S, max_seq)
+    return logits, {"pos": jnp.asarray(S, jnp.int32), "layers": layer_caches}
+
+
+def _mamba_prefill_state(cfg, p, u):
+    """Final (h, conv) state after a full sequence (for prefill->decode)."""
+    di, st, dr = cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank
+    from .mamba import causal_conv1d, _ssm_scan_fused
+
+    xz = u @ p["in_proj"]
+    x, _ = jnp.split(xz, 2, axis=-1)
+    conv_tail = x[:, -(cfg.ssm_d_conv - 1) :, :]
+    xc = jax.nn.silu(causal_conv1d(x, p["conv_w"], p["conv_b"]))
+    dbl = xc @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(dbl, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    _, h_last = _ssm_scan_fused(dt, xc, Bm, Cm, A)
+    return {"h": h_last, "conv": conv_tail}

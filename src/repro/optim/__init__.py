@@ -1,0 +1,2 @@
+"""Optimizers + distributed-optimization tricks."""
+from . import adamw, compression  # noqa: F401

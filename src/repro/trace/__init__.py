@@ -1,0 +1,2 @@
+"""Tracing substrate: TAU-analogue tracer, SST-analogue streams, monitor."""
+from . import tracer, stream, monitor  # noqa: F401

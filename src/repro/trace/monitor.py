@@ -1,0 +1,133 @@
+"""ChimbukoMonitor: the paper's full online pipeline wired to a training run.
+
+One object owns, per rank: on-node AD + reducer + provenance; globally: the
+parameter server and viz feeds.  ``ingest`` is the in-situ path (frame →
+records → labels → reduced stream → provenance); ``record_step_times`` is
+the workflow-level application: per-rank step-time anomaly detection =
+straggler detection, feeding mitigation callbacks (alert / checkpoint-now /
+rebalance) — the fault-tolerance hook the framework exposes at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ad import ADFrameResult, OnNodeAD
+from repro.core.events import Frame, FunctionRegistry
+from repro.core.provenance import ProvenanceDB
+from repro.core.ps import ParameterServer
+from repro.core.reduction import Reducer, merge_stats
+from repro.core.stats import RunningStats
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    rank: int
+    step_time: float
+    zscore: float
+
+
+class ChimbukoMonitor:
+    def __init__(
+        self,
+        num_funcs: int = 64,
+        registry: Optional[FunctionRegistry] = None,
+        prov_path: Optional[str] = None,
+        alpha: float = 6.0,
+        min_samples: int = 10,
+        k_neighbors: int = 5,
+        straggler_alpha: float = 3.0,
+        straggler_min_steps: int = 10,
+        algorithm: str = "sstd",
+        run_info: Optional[dict] = None,
+    ):
+        self.registry = registry or FunctionRegistry()
+        self.ps = ParameterServer(num_funcs)
+        self._num_funcs = num_funcs
+        self._alpha = alpha
+        self._min_samples = min_samples
+        self._algorithm = algorithm
+        self.ads: Dict[int, OnNodeAD] = {}
+        self.reducers: Dict[int, Reducer] = {}
+        self.provdb = ProvenanceDB(
+            path=prov_path, registry=self.registry, k_neighbors=k_neighbors,
+            run_info=run_info,
+        )
+        # reduced record store: what the on-node modules write for the viz
+        self.kept: Dict[Tuple[int, int], np.ndarray] = {}
+        # straggler detection state
+        self._stime = RunningStats()
+        self._s_alpha = straggler_alpha
+        self._s_min = straggler_min_steps
+        self.stragglers: List[StragglerEvent] = []
+        self._mitigations: List[Callable[[StragglerEvent], None]] = []
+
+    # ------------------------------------------------------------- trace AD
+    def _ad(self, rank: int) -> OnNodeAD:
+        if rank not in self.ads:
+            self.ads[rank] = OnNodeAD(
+                self._num_funcs, rank=rank, ps_client=self.ps,
+                alpha=self._alpha, min_samples=self._min_samples,
+                algorithm=self._algorithm,
+            )
+            self.reducers[rank] = Reducer()
+        return self.ads[rank]
+
+    def ingest(self, frame: Frame) -> ADFrameResult:
+        """Full in-situ path for one rank-frame."""
+        res = self._ad(frame.rank).process_frame(frame)
+        kept_idx = self.reducers[frame.rank].reduce(res)
+        self.kept[(frame.rank, frame.step)] = res.records[kept_idx]
+        self.ps.report_anomalies(frame.rank, frame.step, res.n_anomalies)
+        if res.n_anomalies:
+            self.provdb.ingest(res, frame.comm_events)
+        return res
+
+    # ---------------------------------------------------------- stragglers
+    def on_straggler(self, cb: Callable[[StragglerEvent], None]) -> None:
+        self._mitigations.append(cb)
+
+    def record_step_times(
+        self, step: int, times_by_rank: Dict[int, float]
+    ) -> List[StragglerEvent]:
+        """Detect per-rank step-time outliers against the running profile."""
+        out: List[StragglerEvent] = []
+        xs = np.asarray(list(times_by_rank.values()), np.float64)
+        mu, sd = self._stime.mean, self._stime.std
+        if self._stime.n >= self._s_min and sd > 0:
+            for rank, t in times_by_rank.items():
+                z = (t - mu) / sd
+                if z > self._s_alpha:
+                    ev = StragglerEvent(step, rank, t, float(z))
+                    out.append(ev)
+                    self.stragglers.append(ev)
+                    for cb in self._mitigations:
+                        cb(ev)
+        self._stime.push_batch(xs)
+        return out
+
+    # -------------------------------------------------------------- report
+    def reduction_stats(self):
+        return merge_stats([r.stats for r in self.reducers.values()])
+
+    def summary(self) -> dict:
+        red = self.reduction_stats()
+        return {
+            "frames": sum(ad.frames_seen for ad in self.ads.values()),
+            "events": sum(ad.builder.n_events for ad in self.ads.values()),
+            "anomalies": sum(ad.n_anomalies_total for ad in self.ads.values()),
+            "reduction_factor": red.factor,
+            "raw_bytes": red.raw_bytes,
+            "reduced_bytes": red.reduced_bytes,
+            "provenance_records": len(self.provdb),
+            "stragglers": len(self.stragglers),
+            "ps_updates": self.ps.n_updates,
+        }
+
+    def close(self) -> None:
+        self.provdb.close()

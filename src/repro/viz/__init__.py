@@ -1,0 +1,2 @@
+"""Visualization data products (paper Figs. 3-6)."""
+from . import server  # noqa: F401

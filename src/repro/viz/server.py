@@ -1,0 +1,114 @@
+"""Visualization backend (data products of paper Figs. 3–6).
+
+No web stack offline — this module reproduces exactly the *data* each view
+renders, with the same two-client structure as the paper's server (§IV):
+data senders (PS + on-node modules via ChimbukoMonitor) and users (queries
+below).  A JSON dump stands in for the websocket broadcast.
+
+  rank_dashboard    Fig. 3: most/least problematic ranks by a chosen stat
+  frame_series      Fig. 4: streaming (step, #anomalies) scatter per rank
+  function_view     Fig. 5: executed functions of one (rank, frame) with
+                    selectable axes (entry/exit/runtime/fid/label/children/messages)
+  call_stack_view   Fig. 6: call stack around an anomaly with comm arrows
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.trace.monitor import ChimbukoMonitor
+
+_AXES = {"fid", "entry", "exit", "runtime", "label", "n_children", "n_msgs", "depth"}
+
+
+class VizServer:
+    def __init__(self, monitor: ChimbukoMonitor):
+        self.monitor = monitor
+
+    # ---------------------------------------------------------------- Fig 3
+    def rank_dashboard(
+        self, stat: str = "stddev", top: int = 5, bottom: int = 5
+    ) -> Dict[str, Any]:
+        dash = self.monitor.ps.rank_dashboard()
+        key = {"average": "average", "stddev": "stddev", "maximum": "maximum",
+               "minimum": "minimum", "total": "total"}[stat]
+        ranked = sorted(dash.items(), key=lambda kv: kv[1][key], reverse=True)
+        return {
+            "stat": stat,
+            "top": [{"rank": r, **v} for r, v in ranked[:top]],
+            "bottom": [{"rank": r, **v} for r, v in ranked[-bottom:]],
+        }
+
+    # ---------------------------------------------------------------- Fig 4
+    def frame_series(self, rank: int) -> List[Dict[str, int]]:
+        return [
+            {"step": s, "n_anomalies": n}
+            for s, n in self.monitor.ps.frame_series(rank)
+        ]
+
+    # ---------------------------------------------------------------- Fig 5
+    def function_view(
+        self, rank: int, step: int, x: str = "entry", y: str = "fid"
+    ) -> Dict[str, Any]:
+        assert x in _AXES and y in _AXES, (x, y)
+        recs = self.monitor.kept.get((rank, step))
+        if recs is None or not len(recs):
+            return {"rank": rank, "step": step, "points": []}
+        reg = self.monitor.registry
+        pts = [
+            {
+                "x": int(r[x]), "y": int(r[y]),
+                "func": reg.name_of(int(r["fid"])),
+                "label": int(r["label"]),
+                "runtime": int(r["runtime"]),
+                "n_children": int(r["n_children"]),
+                "n_msgs": int(r["n_msgs"]),
+            }
+            for r in recs
+        ]
+        return {"rank": rank, "step": step, "x": x, "y": y, "points": pts}
+
+    # ---------------------------------------------------------------- Fig 6
+    def call_stack_view(
+        self, rank: int, t0: int, t1: int, fid: Optional[int] = None
+    ) -> Dict[str, Any]:
+        docs = self.monitor.provdb.query(rank=rank, fid=fid, t0=t0, t1=t1)
+        reg = self.monitor.registry
+        bars, arrows = [], []
+        for doc in docs:
+            a = doc["anomaly"]
+            bars.append(
+                {
+                    "func": a.get("func", str(a["fid"])), "entry": a["entry"],
+                    "exit": a["exit"], "depth": a["depth"], "label": 1,
+                }
+            )
+            for anc in doc["call_stack"]:
+                bars.append(
+                    {"func": anc["func"], "entry": anc["entry"], "exit": t1,
+                     "depth": anc["depth"], "label": 0}
+                )
+            for nb in doc["neighbors"]:
+                bars.append(
+                    {"func": nb.get("func", str(nb["fid"])), "entry": nb["entry"],
+                     "exit": nb["exit"], "depth": nb["depth"], "label": int(nb["label"] == 1)}
+                )
+            for c in doc["comm"]:
+                arrows.append(
+                    {"ts": c["ts"], "partner": c["partner"], "nbytes": c["nbytes"],
+                     "kind": "send" if c["ctype"] == 0 else "recv"}
+                )
+        return {"rank": rank, "t0": t0, "t1": t1, "bars": bars, "comm": arrows}
+
+    # ------------------------------------------------------------- export
+    def dump(self, path: str, ranks: Optional[List[int]] = None) -> None:
+        ranks = ranks if ranks is not None else sorted(self.monitor.ads.keys())
+        doc = {
+            "dashboard": self.rank_dashboard(),
+            "series": {r: self.frame_series(r) for r in ranks},
+            "summary": self.monitor.summary(),
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)

@@ -1,0 +1,174 @@
+"""Call-stack builder: vectorized path vs slow oracle, carryover, comm."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as E
+from repro.core.callstack import CallStackBuilder
+from repro.core.sim import WorkloadGenerator, nwchem_like, uniform_workload
+
+
+def _simple_frame(rows, comm=(), rank=0, step=0):
+    fe = E.make_func_events(rows, rank=rank)
+    fe = fe[np.argsort(fe["ts"], kind="stable")]
+    ce = E.empty_comm_events(len(comm))
+    ce["rank"] = rank
+    for i, (tag, partner, ts) in enumerate(comm):
+        ce["tag"][i], ce["partner"][i], ce["ts"][i] = tag, partner, ts
+    return E.Frame(0, rank, step, fe, ce)
+
+
+def test_nested_calls():
+    #  A [0, 100] contains B [10, 50] contains C [20, 30]; D [60, 90] in A
+    frame = _simple_frame(
+        [
+            (0, E.ENTRY, 0),
+            (1, E.ENTRY, 10),
+            (2, E.ENTRY, 20),
+            (2, E.EXIT, 30),
+            (1, E.EXIT, 50),
+            (3, E.ENTRY, 60),
+            (3, E.EXIT, 90),
+            (0, E.EXIT, 100),
+        ]
+    )
+    b = CallStackBuilder()
+    recs, ctx = b.process(frame)
+    assert len(recs) == 4
+    by_fid = {int(r["fid"]): r for r in recs}
+    assert by_fid[0]["runtime"] == 100 and by_fid[0]["depth"] == 1
+    assert by_fid[0]["n_children"] == 2
+    assert by_fid[1]["n_children"] == 1 and by_fid[1]["parent_fid"] == 0
+    assert by_fid[2]["depth"] == 3 and by_fid[2]["parent_fid"] == 1
+    assert by_fid[3]["parent_fid"] == 0
+    # ancestors of C (fid 2)
+    c_idx = int(np.nonzero(recs["fid"] == 2)[0][0])
+    chain = [f for (f, _, _) in ctx.ancestors(c_idx)]
+    assert chain == [1, 0]
+
+
+def test_carryover_across_frames():
+    b = CallStackBuilder()
+    f1 = _simple_frame([(0, E.ENTRY, 0), (1, E.ENTRY, 10)])
+    recs, _ = b.process(f1)
+    assert len(recs) == 0 and b.open_depth() == 2
+    f2 = _simple_frame([(2, E.ENTRY, 20), (2, E.EXIT, 25), (1, E.EXIT, 40), (0, E.EXIT, 50)], step=1)
+    recs, _ = b.process(f2)
+    assert len(recs) == 3 and b.open_depth() == 0
+    by_fid = {int(r["fid"]): r for r in recs}
+    assert by_fid[0]["runtime"] == 50
+    assert by_fid[1]["runtime"] == 30
+    assert by_fid[1]["n_children"] == 1  # child completed in later frame
+    assert by_fid[0]["n_children"] == 1
+
+
+def test_comm_attribution():
+    frame = _simple_frame(
+        [(0, E.ENTRY, 0), (1, E.ENTRY, 10), (1, E.EXIT, 20), (0, E.EXIT, 30)],
+        comm=[(0, 1, 15), (1, 1, 25)],
+    )
+    recs, ctx = b = CallStackBuilder().process(frame)
+    by_fid = {int(r["fid"]): r for r in recs}
+    assert by_fid[1]["n_msgs"] == 1  # ts=15 inside fid 1
+    assert by_fid[0]["n_msgs"] == 1  # ts=25 inside fid 0 only
+    assert (ctx.comm_entry_row >= 0).all()
+
+
+def test_orphan_exit_slow_path():
+    frame = _simple_frame([(5, E.EXIT, 1), (0, E.ENTRY, 2), (0, E.EXIT, 3)])
+    b = CallStackBuilder()
+    recs, _ = b.process(frame)
+    assert len(recs) == 1
+    assert b.n_orphan_exits == 1
+
+
+@st.composite
+def random_event_stream(draw):
+    """Random well-formed nested call sequences, split into frames."""
+    n_calls = draw(st.integers(1, 60))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    rows = []
+    t = [0]
+
+    def gen(depth):
+        fid = int(rng.integers(0, 6))
+        t[0] += int(rng.integers(1, 5))
+        rows.append((fid, int(E.ENTRY), t[0]))
+        for _ in range(int(rng.integers(0, 3)) if depth < 4 else 0):
+            if len(rows) < 2 * n_calls:
+                gen(depth + 1)
+        t[0] += int(rng.integers(1, 5))
+        rows.append((fid, int(E.EXIT), t[0]))
+
+    while len(rows) < 2 * n_calls:
+        gen(1)
+    n_splits = draw(st.integers(0, 3))
+    cuts = sorted(draw(st.lists(st.integers(0, len(rows)), min_size=n_splits, max_size=n_splits)))
+    return rows, cuts
+
+
+@given(random_event_stream())
+@settings(max_examples=50, deadline=None)
+def test_vectorized_matches_slow_oracle(stream):
+    rows, cuts = stream
+    pieces = np.split(np.arange(len(rows)), cuts)
+    fast, slow = CallStackBuilder(), CallStackBuilder()
+    all_fast, all_slow = [], []
+    for step, piece in enumerate(pieces):
+        chunk = [rows[i] for i in piece]
+        frame = _simple_frame(chunk, step=step)
+        recs, _ = fast.process(frame)
+        all_fast.append(recs)
+        # force the slow path by calling it directly
+        ctx2 = _fresh_ctx(frame)
+        recs2, _ = slow._process_tid_slow(
+            0, frame.func_events, frame.comm_events, ctx2, np.arange(len(frame.comm_events))
+        )
+        all_slow.append(recs2)
+    a = np.concatenate(all_fast)
+    b = np.concatenate(all_slow)
+    assert len(a) == len(b)
+    for col in ("fid", "entry", "exit", "runtime", "depth", "n_children", "parent_fid"):
+        np.testing.assert_array_equal(a[col], b[col], err_msg=col)
+
+
+def _fresh_ctx(frame):
+    from repro.core.callstack import FrameContext
+
+    return FrameContext(
+        tid_of_record=np.zeros(0, np.uint32),
+        entry_fid={},
+        entry_ts={},
+        entry_depth={},
+        entry_parent_row={},
+        rec_entry_row=np.zeros(0, np.int64),
+        comm_entry_row=np.full(len(frame.comm_events), -1, np.int64),
+    )
+
+
+def test_workload_generator_roundtrip():
+    """Generated frames must reconstruct to exactly the generated truth."""
+    gen = WorkloadGenerator(nwchem_like(anomaly_rate=0.05), n_ranks=3, seed=1)
+    b = {r: CallStackBuilder(rank=r) for r in range(3)}
+    for step in range(4):
+        for rank in range(3):
+            frame, truth = gen.frame(rank, step)
+            recs, _ = b[rank].process(frame)
+            assert len(recs) == len(truth)
+            np.testing.assert_array_equal(recs["fid"], truth["fid"])
+            np.testing.assert_array_equal(recs["entry"], truth["entry"])
+            np.testing.assert_array_equal(recs["exit"], truth["exit"])
+        assert b[rank].open_depth() == 0
+
+
+def test_multi_tid():
+    fe = np.concatenate(
+        [
+            E.make_func_events([(0, E.ENTRY, 0), (0, E.EXIT, 10)], tid=0),
+            E.make_func_events([(1, E.ENTRY, 2), (1, E.EXIT, 5)], tid=1),
+        ]
+    )
+    frame = E.Frame(0, 0, 0, fe, E.empty_comm_events(0))
+    recs, ctx = CallStackBuilder().process(frame)
+    assert len(recs) == 2
+    assert set(recs["fid"]) == {0, 1}

@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.mamba_scan import mamba_scan as ms_raw
+from repro.kernels.moments import moments_and_labels as mo_raw
+
+
+# ---------------------------------------------------------------- moments
+@pytest.mark.parametrize("N,F,EB", [(64, 16, 32), (500, 128, 128), (1000, 7, 512)])
+def test_moments_kernel_sweep(N, F, EB):
+    rng = np.random.default_rng(N + F)
+    fids = rng.integers(-1, F, N).astype(np.int32)  # includes padding (-1)
+    durs = rng.lognormal(3, 1, N).astype(np.float32)
+    # previous table with some mass so labeling paths fire
+    prev_f = rng.integers(0, F, 4 * F).astype(np.int32)
+    prev_x = rng.lognormal(3, 0.2, 4 * F).astype(np.float32)
+    prev, _ = ref.moments_and_labels_ref(jnp.asarray(prev_f), jnp.asarray(prev_x),
+                                         jnp.zeros((F, 5)))
+    # put a few extreme outliers in
+    durs[:3] = 1e5
+
+    d_k, l_k = mo_raw(jnp.asarray(fids), jnp.asarray(durs), prev,
+                      block_events=EB, interpret=True)
+    d_r, l_r = ref.moments_and_labels_ref(jnp.asarray(fids), jnp.asarray(durs), prev)
+    np.testing.assert_allclose(np.asarray(d_k[:, :3]), np.asarray(d_r[:, :3]),
+                               rtol=1e-5, atol=1e-2)
+    seen = np.asarray(d_r[:, 0]) > 0
+    np.testing.assert_allclose(np.asarray(d_k[seen, 3:]), np.asarray(d_r[seen, 3:]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+def test_moments_ops_matches_jax_ad():
+    """Kernel-backed ad_step == reference jax_ad.ad_step."""
+    from repro.core import jax_ad as J
+
+    rng = np.random.default_rng(0)
+    F = 32
+    fids = jnp.asarray(rng.integers(0, F, 600), jnp.int32)
+    durs = jnp.asarray(rng.normal(100, 5, 600), jnp.float32)
+    t_ref, lab_ref = J.ad_step(J.init_table(F), fids, durs)
+    t_k, lab_k = ops.moments_update(J.init_table(F), fids, durs)
+    np.testing.assert_allclose(np.asarray(t_k[:, :2]), np.asarray(t_ref[:, :2]),
+                               rtol=1e-5, atol=1e-3)
+    # M2 via raw sums cancels catastrophically in f32 (documented in
+    # kernels/moments.py); sigma needs ~3 digits for a 6-sigma detector.
+    np.testing.assert_allclose(np.asarray(t_k[:, 2]), np.asarray(t_ref[:, 2]),
+                               rtol=1e-2, atol=1e-1)
+    np.testing.assert_array_equal(np.asarray(lab_k), np.asarray(lab_ref))
+    # one extreme event flags identically
+    f2 = jnp.asarray([0, 1], jnp.int32)
+    d2 = jnp.asarray([100.0, 9000.0], jnp.float32)
+    _, l2r = J.ad_step(t_ref, f2, d2)
+    _, l2k = ops.moments_update(t_k, f2, d2)
+    assert l2k.tolist() == l2r.tolist() == [0, 1]
+
+
+# ---------------------------------------------------------- flash attention
+CASES = [
+    # (B, Sq, Sk, H, KV, hd, causal, window, cap, dtype)
+    (2, 128, 128, 4, 4, 64, True, 0, 0.0, jnp.float32),
+    (1, 256, 256, 4, 2, 64, True, 0, 0.0, jnp.float32),
+    (2, 128, 128, 8, 1, 64, True, 0, 0.0, jnp.bfloat16),  # MQA
+    (1, 256, 256, 4, 4, 64, False, 0, 0.0, jnp.float32),  # encoder
+    (1, 256, 256, 4, 2, 64, True, 100, 0.0, jnp.float32),  # SWA
+    (1, 128, 128, 2, 2, 64, True, 0, 50.0, jnp.float32),  # softcap
+    (1, 128, 128, 2, 2, 120, True, 0, 0.0, jnp.float32),  # danube head_dim
+    (1, 128, 128, 2, 1, 256, True, 64, 30.0, jnp.bfloat16),  # gemma-ish combo
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd,causal,window,cap,dtype", CASES)
+def test_flash_attention_sweep(B, Sq, Sk, H, KV, hd, causal, window, cap, dtype):
+    rng = np.random.default_rng(hd + Sq + H)
+    q = jnp.asarray(rng.normal(0, 1, (B, Sq, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, Sk, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, Sk, KV, hd)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                              block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_kv_len():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (1, 64, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 128, 2, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, kv_len=77, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False, kv_len=77)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel == the model's XLA chunked path (same math, two backends)."""
+    from repro.models import layers as L
+
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(0, 1, (2, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 256, 2, 64)), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    b = L.attention_chunked(q, k, v, causal=True, chunk_q=64, chunk_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- mamba scan
+@pytest.mark.parametrize("B,S,di,st,bd,Lc", [
+    (1, 64, 16, 4, 8, 16),
+    (2, 128, 64, 16, 32, 32),
+    (1, 256, 32, 16, 32, 64),
+])
+def test_mamba_scan_sweep(B, S, di, st, bd, Lc):
+    rng = np.random.default_rng(S + di)
+    a = np.exp(-rng.uniform(0.05, 2.0, (B, S, di, st))).astype(np.float32)
+    b = rng.normal(0, 1, (B, S, di, st)).astype(np.float32)
+    C = rng.normal(0, 1, (B, S, st)).astype(np.float32)
+    y, h = ms_raw(jnp.asarray(a), jnp.asarray(b), jnp.asarray(C),
+                  block_d=bd, chunk=Lc, interpret=True)
+    y_r, h_r = ref.mamba_scan_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(C))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_r), rtol=1e-5, atol=1e-5)
+
+
+def test_mamba_scan_matches_model_chunked():
+    from repro.models.mamba import _ssm_scan_chunked
+
+    rng = np.random.default_rng(3)
+    B, S, di, st = 2, 128, 32, 8
+    a = np.exp(-rng.uniform(0.05, 2.0, (B, S, di, st))).astype(np.float32)
+    b = rng.normal(0, 1, (B, S, di, st)).astype(np.float32)
+    C = rng.normal(0, 1, (B, S, st)).astype(np.float32)
+    y_k, h_k = ops.mamba_scan(jnp.asarray(a), jnp.asarray(b), jnp.asarray(C),
+                              block_d=16, chunk=32)
+    y_m, h_m = _ssm_scan_chunked(jnp.asarray(a), jnp.asarray(b), jnp.asarray(C), chunk=32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,60 @@
+"""Offline mode (paper §II-B): archive replay + cross-run comparison."""
+import numpy as np
+import pytest
+
+from repro.core.offline import RunProfile, compare_runs, replay, report
+from repro.core.sim import WorkloadGenerator, nwchem_like
+from repro.trace.monitor import ChimbukoMonitor
+from repro.trace.stream import FrameStore
+
+
+def _make_run(tmp_path, name, slow_factor=1.0, steps=25, ranks=3):
+    spec = nwchem_like(anomaly_rate=0.004)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 40.0
+    # run B simulates a regression in SP_GTXPBL (the case-study culprit)
+    spec.funcs["SP_GTXPBL"].mean_us *= slow_factor
+    gen = WorkloadGenerator(spec, n_ranks=ranks, seed=11)
+    store = FrameStore(str(tmp_path / name))
+    for step in range(steps):
+        for rank in range(ranks):
+            frame, _ = gen.frame(rank, step)
+            store.write(frame)
+    return store, gen.registry
+
+
+def test_replay_equals_online(tmp_path):
+    """Offline replay == the online pipeline on the same frames."""
+    store, registry = _make_run(tmp_path, "runA")
+    # online pass
+    online = ChimbukoMonitor(num_funcs=len(registry), registry=registry,
+                             min_samples=30)
+    for step in range(25):
+        for rank in store.ranks():
+            online.ingest(store.read(rank, step))
+    # offline replay
+    offline = replay(store, registry=registry, num_funcs=len(registry),
+                     min_samples=30)
+    assert offline.summary()["anomalies"] == online.summary()["anomalies"]
+    assert offline.summary()["events"] == online.summary()["events"]
+    np.testing.assert_allclose(
+        offline.ps.snapshot().table[:, :3], online.ps.snapshot().table[:, :3],
+        rtol=1e-9,
+    )
+
+
+def test_cross_run_comparison_finds_regression(tmp_path):
+    store_a, reg_a = _make_run(tmp_path, "runA", slow_factor=1.0)
+    store_b, reg_b = _make_run(tmp_path, "runB", slow_factor=1.6)
+    mon_a = replay(store_a, registry=reg_a, num_funcs=len(reg_a), min_samples=30)
+    mon_b = replay(store_b, registry=reg_b, num_funcs=len(reg_b), min_samples=30)
+    prof_a = RunProfile.from_monitor("A", mon_a)
+    prof_b = RunProfile.from_monitor("B", mon_b)
+    rows = compare_runs(prof_a, prof_b)
+    assert rows, "comparison must produce rows"
+    top = rows[0]
+    # the injected 1.6x regression (and its wrapper) must rank first
+    assert top["func"] in ("SP_GTXPBL", "SP_GETXBL"), rows[:3]
+    assert top["rel_change"] > 0.3
+    txt = report(rows)
+    assert "SP_GTXPBL" in txt or "SP_GETXBL" in txt

@@ -1,0 +1,101 @@
+"""Property tests for Pébay streaming moments (paper ref [14])."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats as S
+
+
+def exact_row(xs: np.ndarray) -> np.ndarray:
+    return S.batch_moments(np.asarray(xs, np.float64))
+
+
+values = st.lists(
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=64),
+    min_size=0,
+    max_size=200,
+)
+
+
+@given(values, values)
+@settings(max_examples=60, deadline=None)
+def test_merge_matches_concat(xs, ys):
+    a, b = exact_row(np.asarray(xs)), exact_row(np.asarray(ys))
+    merged = S.merge_moments(a, b)
+    ref = exact_row(np.asarray(xs + ys))
+    assert np.isclose(merged[S.N], ref[S.N])
+    if ref[S.N] > 0:
+        scale = max(abs(ref[S.MEAN]), 1.0)
+        assert np.isclose(merged[S.MEAN], ref[S.MEAN], rtol=1e-9, atol=1e-6 * scale)
+        assert np.isclose(merged[S.M2], ref[S.M2], rtol=1e-6, atol=1e-3 * scale**2)
+        assert np.isclose(merged[S.MIN], ref[S.MIN])
+        assert np.isclose(merged[S.MAX], ref[S.MAX])
+
+
+@given(values, values, values)
+@settings(max_examples=40, deadline=None)
+def test_merge_associative(xs, ys, zs):
+    a, b, c = (exact_row(np.asarray(v)) for v in (xs, ys, zs))
+    left = S.merge_moments(S.merge_moments(a, b), c)
+    right = S.merge_moments(a, S.merge_moments(b, c))
+    assert np.allclose(left[:3], right[:3], rtol=1e-7, atol=1e-4)
+
+
+@given(values)
+@settings(max_examples=40, deadline=None)
+def test_higher_moments_match_numpy(xs):
+    xs = np.asarray(xs, np.float64)
+    if xs.size < 3 or np.ptp(xs) < 1e-9:
+        return
+    rs = S.RunningStats()
+    # push in random chunks to exercise the streaming path
+    rng = np.random.default_rng(0)
+    splits = np.sort(rng.integers(0, xs.size, size=3))
+    for chunk in np.split(xs, splits):
+        if chunk.size:
+            rs.push_batch(chunk)
+    assert np.isclose(rs.mean, xs.mean(), rtol=1e-8, atol=1e-6)
+    assert np.isclose(rs.var, xs.var(), rtol=1e-5, atol=1e-3)
+
+
+def test_stats_table_update_and_merge():
+    rng = np.random.default_rng(42)
+    fids = rng.integers(0, 8, size=500)
+    vals = rng.lognormal(3.0, 1.0, size=500)
+    t = S.StatsTable(8)
+    # split into 7 frames
+    for part in np.array_split(np.arange(500), 7):
+        t.update_batch(fids[part], vals[part])
+    for f in range(8):
+        sel = vals[fids == f]
+        assert np.isclose(t.counts()[f], sel.size)
+        if sel.size:
+            assert np.isclose(t.means()[f], sel.mean(), rtol=1e-9)
+            assert np.isclose(t.stds()[f], sel.std(), rtol=1e-6)
+
+    # two-table merge == one table over all data
+    t1, t2 = S.StatsTable(8), S.StatsTable(8)
+    t1.update_batch(fids[:250], vals[:250])
+    t2.update_batch(fids[250:], vals[250:])
+    t1.merge(t2)
+    assert np.allclose(t1.table[:, : S.M3], t.table[:, : S.M3], rtol=1e-8)
+
+
+def test_empty_and_growth():
+    t = S.StatsTable(2)
+    t.update_batch(np.zeros(0, np.int64), np.zeros(0))
+    assert t.counts().sum() == 0
+    t.grow(5)
+    t.update_batch(np.asarray([4]), np.asarray([3.0]))
+    assert t.counts()[4] == 1
+    r = t.row(4)
+    assert r.mean == 3.0 and r.std == 0.0
+
+
+def test_running_stats_skew_kurtosis():
+    rng = np.random.default_rng(7)
+    xs = rng.normal(size=20000)
+    rs = S.RunningStats()
+    rs.push_batch(xs)
+    assert abs(rs.skewness) < 0.1
+    assert abs(rs.kurtosis) < 0.2

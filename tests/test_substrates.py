@@ -1,0 +1,195 @@
+"""Tracer, streams, monitor, checkpoint, viz — substrate behaviour tests."""
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.callstack import CallStackBuilder
+from repro.core.events import FunctionRegistry
+from repro.checkpoint import ckpt as CK
+from repro.trace.monitor import ChimbukoMonitor
+from repro.trace.stream import FrameStore, SSTChannel
+from repro.trace.tracer import Tracer
+from repro.viz.server import VizServer
+
+
+def test_tracer_roundtrip():
+    tr = Tracer()
+    with tr.span("outer"):
+        with tr.span("inner"):
+            time.sleep(0.001)
+        tr.comm(partner=3, nbytes=1024)
+    frame = tr.drain(step=0)
+    assert len(frame.func_events) == 4
+    recs, ctx = CallStackBuilder().process(frame)
+    assert len(recs) == 2
+    by = {tr.registry.name_of(int(r["fid"])): r for r in recs}
+    assert by["outer"]["n_children"] == 1
+    assert by["inner"]["runtime"] >= 1000  # >= 1ms in us
+    assert by["outer"]["n_msgs"] == 1
+
+
+def test_tracer_filtering():
+    tr = Tracer(filtered=True)
+    with tr.span("keep"):
+        for _ in range(10):
+            with tr.span("noise", filterable=True):
+                pass
+    frame = tr.drain(0)
+    assert len(frame.func_events) == 2  # only 'keep'
+    assert tr.n_dropped == 20
+    tr2 = Tracer(filtered=False)
+    with tr2.span("keep"):
+        for _ in range(10):
+            with tr2.span("noise", filterable=True):
+                pass
+    assert len(tr2.drain(0).func_events) == 22
+
+
+def test_sst_channel_threaded():
+    ch = SSTChannel(capacity=4)
+    tr = Tracer()
+
+    def producer():
+        for step in range(10):
+            with tr.span("work"):
+                pass
+            ch.put(tr.drain(step))
+        ch.close()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    frames = list(ch)
+    t.join()
+    assert len(frames) == 10
+    assert [f.step for f in frames] == list(range(10))
+
+
+def test_frame_store_roundtrip(tmp_path):
+    store = FrameStore(str(tmp_path))
+    tr = Tracer(rank=2)
+    for step in range(3):
+        with tr.span("a"):
+            tr.comm(0, 64)
+        store.write(tr.drain(step))
+    assert store.ranks() == [2]
+    assert store.steps(2) == [0, 1, 2]
+    f = store.read(2, 1)
+    assert f.rank == 2 and f.step == 1 and len(f.func_events) == 2
+    assert len(list(store.replay(2))) == 3
+
+
+def test_monitor_end_to_end(tmp_path):
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+
+    spec = nwchem_like(anomaly_rate=0.004)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 50.0
+    gen = WorkloadGenerator(spec, n_ranks=4, seed=0)
+    mon = ChimbukoMonitor(
+        num_funcs=len(gen.registry), registry=gen.registry,
+        prov_path=str(tmp_path / "prov.jsonl"), min_samples=20,
+    )
+    for step in range(60):
+        for rank in range(4):
+            frame, _ = gen.frame(rank, step)
+            mon.ingest(frame)
+    s = mon.summary()
+    assert s["frames"] == 240
+    assert s["anomalies"] > 0
+    assert s["reduction_factor"] > 3
+    assert s["provenance_records"] == s["anomalies"]
+    viz = VizServer(mon)
+    dash = viz.rank_dashboard(stat="total")
+    assert len(dash["top"]) > 0
+    series = viz.frame_series(0)
+    assert len(series) == 60
+    # function view on a step that kept records
+    key = next(iter(mon.kept))
+    fv = viz.function_view(key[0], key[1], x="entry", y="runtime")
+    assert fv["points"] or not len(mon.kept[key])
+    viz.dump(str(tmp_path / "viz.json"))
+    assert json.load(open(tmp_path / "viz.json"))["summary"]["frames"] == 240
+    mon.close()
+
+
+def test_monitor_straggler_detection():
+    mon = ChimbukoMonitor(straggler_alpha=3.0, straggler_min_steps=5)
+    fired = []
+    mon.on_straggler(lambda ev: fired.append(ev))
+    for step in range(20):
+        times = {r: 0.10 + 0.001 * r for r in range(4)}
+        if step == 15:
+            times[2] = 0.50  # injected straggler
+        mon.record_step_times(step, times)
+    assert any(ev.rank == 2 and ev.step == 15 for ev in fired)
+    assert len(mon.stragglers) >= 1
+
+
+def test_checkpoint_atomic_and_resume(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    p = str(tmp_path / "ck")
+    CK.save(p, 10, tree)
+    CK.save(p, 20, jax.tree.map(lambda x: x * 2, tree))
+    assert CK.latest_step(p) == 20
+    step, restored = CK.load(p, target=tree)
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(6).reshape(2, 3) * 2)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    # older step still loadable
+    step, r10 = CK.load(p, step=10, target=tree)
+    np.testing.assert_array_equal(np.asarray(r10["a"]), np.arange(6).reshape(2, 3))
+    # a stale tmp dir must not be visible as a checkpoint
+    os.makedirs(os.path.join(p, "step_00000030.tmp"))
+    assert CK.latest_step(p) == 20
+    CK.prune(p, keep=1)
+    assert CK.latest_step(p) == 20
+    with pytest.raises(FileNotFoundError):
+        CK.load(p, step=10)
+
+
+def test_checkpoint_manager_async(tmp_path):
+    mgr = CK.CheckpointManager(str(tmp_path / "ck"), interval=5, keep=2, async_save=True)
+    tree = {"w": jnp.zeros((8, 8))}
+    saved = 0
+    for step in range(1, 21):
+        tree = {"w": tree["w"] + 1}
+        saved += int(mgr.maybe_save(step, tree))
+    mgr.wait()
+    assert saved == 4  # steps 5, 10, 15, 20
+    out = mgr.restore_or_none(target=tree)
+    assert out is not None
+    step, restored = out
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full((8, 8), 20.0))
+
+
+def test_checkpoint_reshard(tmp_path):
+    """Restore under a different sharding (elastic mesh change)."""
+    import subprocess, sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import ckpt as CK
+tree = {"w": jnp.arange(32.0).reshape(8, 4)}
+CK.save("%s", 1, tree)
+mesh = jax.make_mesh((4,), ("data",))
+sh = {"w": NamedSharding(mesh, P("data", None))}
+step, restored = CK.load("%s", target=tree, shardings=sh)
+assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(32.0).reshape(8, 4))
+print("RESHARD_OK")
+""" % (str(tmp_path / "ck2"), str(tmp_path / "ck2"))
+    r = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, timeout=240,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+    )
+    assert "RESHARD_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,72 @@
+"""Render the roofline table from dry-run artifacts into EXPERIMENTS.md.
+
+Splices a markdown table between the <!-- ROOFLINE_TABLE --> marker and the
+next blank-line-delimited section.  Run after a dry-run sweep:
+
+    PYTHONPATH=src python tools/update_experiments.py
+"""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_roofline import load_records, table
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "—"
+    return f"{x:.{nd}f}"
+
+
+def render(mesh="single") -> str:
+    rows = table(load_records(mesh=mesh))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | compute s | memory s (probe↑ / floor↓) | collective s | dominant | cf | useful | GiB/dev | mb | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | *skip* | — | — | — | — | {r.get('note','')[:46]} |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | **{r['status']}** | — | — | — | — | {r.get('note','')[:46]} |"
+            )
+            continue
+        out.append(
+            "| {arch} | {shape} | {c} | {m} / {mf} | {co} | {dom} | {cf} | {useful} | {gib} | {mb} | {fits} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=fmt(r["compute_s"]),
+                m=fmt(r.get("memory_probe_s")), mf=fmt(r.get("memory_floor_s")),
+                co=fmt(r["collective_s"]),
+                dom=r["dominant"],
+                cf=fmt(r.get("compute_fraction"), 3),
+                useful=fmt(r.get("model_vs_hlo"), 2),
+                gib=fmt(r.get("live_gib"), 1),
+                mb=r.get("microbatch", 1),
+                fits="✓" if r.get("fits") else "✗",
+            )
+        )
+    return "\n".join(out)
+
+
+def splice(path: str, marker: str, content: str) -> None:
+    text = open(path).read()
+    pat = re.compile(rf"(<!-- {marker} -->\n).*?(\n\n## |\n\n### |\Z)", re.S)
+    m = pat.search(text)
+    assert m, f"marker {marker} not found"
+    text = text[: m.start(1)] + m.group(1) + content + m.group(2) + text[m.end(2):]
+    open(path, "w").write(text)
+
+
+if __name__ == "__main__":
+    md = render("single")
+    splice("EXPERIMENTS.md", "ROOFLINE_TABLE", md + "\n")
+    print(md)
+    print("\nEXPERIMENTS.md updated")
