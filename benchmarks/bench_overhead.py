@@ -124,21 +124,28 @@ def run(steps: int = 30, arch: str = "gemma-2b") -> List[Dict]:
     mon.close()
 
     # analysis-load sweep: R simulated ranks per step ------------------------
+    # Plain single-instance PS vs the federation (4 shards, clients batching
+    # 4 frame deltas per push) — the §III-B2 multi-instance scaling axis.
     for R in (8, 32):
-        spec = nwchem_like(anomaly_rate=0.004)
-        gen = WorkloadGenerator(spec, n_ranks=R, seed=3)
-        mon = ChimbukoMonitor(num_funcs=len(gen.registry), registry=gen.registry,
-                              min_samples=30)
-        t0 = time.perf_counter()
-        for s in range(steps):
-            for r in range(R):
-                mon.ingest(gen.frame(r, s)[0])
-        dt = time.perf_counter() - t0
-        rows.append(
-            {"config": f"analysis_load_R{R}", "time_s": dt,
-             "per_module_ms": 1e3 * dt / steps / R}
-        )
-        mon.close()
+        for label, ps_kw in (
+            ("", {}),
+            ("_fed", {"ps_shards": 4, "ps_batch_frames": 4}),
+        ):
+            spec = nwchem_like(anomaly_rate=0.004)
+            gen = WorkloadGenerator(spec, n_ranks=R, seed=3)
+            mon = ChimbukoMonitor(num_funcs=len(gen.registry), registry=gen.registry,
+                                  min_samples=30, **ps_kw)
+            t0 = time.perf_counter()
+            for s in range(steps):
+                for r in range(R):
+                    mon.ingest(gen.frame(r, s)[0])
+            mon.flush_ps()  # drain batched clients inside the timed region
+            dt = time.perf_counter() - t0
+            rows.append(
+                {"config": f"analysis_load_R{R}{label}", "time_s": dt,
+                 "per_module_ms": 1e3 * dt / steps / R}
+            )
+            mon.close()
     return rows
 
 

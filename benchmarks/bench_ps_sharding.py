@@ -1,0 +1,134 @@
+"""PS federation scaling: update throughput vs shard count (paper §III-B2).
+
+The paper keeps per-update PS work independent of rank count by running
+multiple parameter-server instances on Summit.  This harness measures the
+analogous axis in our reproduction: R simulated ranks (threads) push frame
+deltas concurrently into a :class:`FederatedPS` with S ∈ {1, 2, 4, 8}
+shards, unbatched (one server round-trip per frame) vs batched
+(:class:`BatchedPSClient` coalescing ``batch_frames`` deltas per push).
+
+Reported metric: rank-frame updates/second absorbed by the PS.  Sharding
+spreads lock acquisitions over S locks; batching amortizes routing + lock
+traffic by the batch factor — together they are the repo's first
+multi-instance scaling axis.
+
+    PYTHONPATH=src python benchmarks/bench_ps_sharding.py
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.ps import BatchedPSClient, FederatedPS
+from repro.core.stats import StatsTable
+
+
+def _make_deltas(
+    n_ranks: int, frames: int, num_funcs: int, working_set: int = 24, seed: int = 0
+):
+    """Pre-generate per-rank frame deltas so timing isolates PS cost.
+
+    Each frame's events hit a small function working set (real trace frames
+    contain the current phase's calls, not the whole registry), so a routed
+    push touches a few shards, not all of them.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(n_ranks):
+        per_rank = []
+        for t in range(frames):
+            ws = rng.choice(num_funcs, size=working_set, replace=False)
+            n = int(rng.integers(40, 160))
+            fids = ws[rng.integers(0, working_set, n)]
+            vals = rng.lognormal(3.0, 1.0, n)
+            per_rank.append(StatsTable(num_funcs).update_batch(fids, vals))
+        out.append(per_rank)
+    return out
+
+
+def _drive(ps, deltas, batch_frames: int) -> float:
+    """Run one thread per rank pushing its deltas; return elapsed seconds."""
+    n_ranks = len(deltas)
+    barrier = threading.Barrier(n_ranks + 1)
+
+    def worker(rank: int) -> None:
+        client = (
+            BatchedPSClient(ps, rank, batch_frames) if batch_frames > 1 else ps
+        )
+        barrier.wait()
+        for step, d in enumerate(deltas[rank]):
+            client.update_and_fetch(rank, step, d)
+        if batch_frames > 1:
+            client.flush()
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(n_ranks)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(
+    shard_counts=(1, 2, 4, 8),
+    n_ranks: int = 8,
+    frames: int = 200,
+    num_funcs: int = 256,
+    batch_frames: int = 8,
+) -> List[Dict]:
+    deltas = _make_deltas(n_ranks, frames, num_funcs)
+    total_updates = n_ranks * frames
+    rows = []
+    reference = None
+    for S in shard_counts:
+        for batched in (False, True):
+            ps = FederatedPS(num_funcs, num_shards=S, aggregate_every=16)
+            dt = _drive(ps, deltas, batch_frames if batched else 1)
+            snap = ps.snapshot().table
+            if reference is None:
+                reference = snap
+            else:
+                # Every configuration must converge to the same global stats.
+                assert np.allclose(reference, snap, rtol=1e-9, atol=1e-9)
+            rows.append(
+                {
+                    "config": f"S{S}_" + ("batched" if batched else "unbatched"),
+                    "shards": S,
+                    "batched": batched,
+                    "time_s": dt,
+                    "total_updates": total_updates,
+                    "updates_per_s": total_updates / dt,
+                    "server_pushes": ps.n_updates,
+                    "shard_load": ps.shard_load(),
+                }
+            )
+    return rows
+
+
+def main():
+    rows = run()
+    by_cfg = {r["config"]: r for r in rows}
+    for r in rows:
+        print(
+            f"ps_sharding/{r['config']},{r['time_s'] * 1e6 / r['total_updates']:.2f},"
+            f"updates_per_s={r['updates_per_s']:.0f};pushes={r['server_pushes']};"
+            f"load={'/'.join(str(x) for x in r['shard_load'])}"
+        )
+    best = 0.0
+    for S in (1, 2, 4, 8):
+        u, b = by_cfg[f"S{S}_unbatched"], by_cfg[f"S{S}_batched"]
+        speedup = b["updates_per_s"] / u["updates_per_s"]
+        best = max(best, speedup)
+        print(f"ps_sharding/S{S}_batch_speedup,,x{speedup:.2f}")
+    # Acceptance: batched clients >= 2x unbatched at 8 simulated ranks.
+    print(f"ps_sharding/acceptance_batched_2x,,{'PASS' if best >= 2.0 else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

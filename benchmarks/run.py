@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig7_ad_scaling   distributed vs non-distributed AD (paper Fig. 7)
   table1_overhead   tracing/Chimbuko execution-time overhead (Fig. 8/Table I)
   fig9_reduction    trace-size reduction factors (Fig. 9)
+  ps_sharding       PS federation update throughput vs shard count (§III-B2)
   kernels           Pallas-vs-XLA micro-benchmarks
   roofline          per-cell roofline terms from the dry-run artifacts
 """
@@ -18,14 +19,15 @@ def main() -> None:
         bench_ad_scaling,
         bench_kernels,
         bench_overhead,
+        bench_ps_sharding,
         bench_reduction,
         bench_roofline,
     )
 
     failures = 0
     print("name,us_per_call,derived")
-    for mod in (bench_ad_scaling, bench_overhead, bench_reduction, bench_kernels,
-                bench_roofline):
+    for mod in (bench_ad_scaling, bench_overhead, bench_reduction,
+                bench_ps_sharding, bench_kernels, bench_roofline):
         try:
             mod.main()
         except Exception:

@@ -1,0 +1,55 @@
+"""Small jax version-compatibility shims.
+
+The repo targets current jax, but runs down to 0.4.x:
+  * ``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+    ``jax`` namespace in 0.5, and its replication-check kwarg was renamed
+    ``check_rep`` → ``check_vma``.
+  * ``jax.sharding.AxisType`` / the ``axis_types`` kwarg of ``make_mesh``
+    only exist on newer jax; older versions default to Auto axes anyway.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+_SM_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+__all__ = ["shard_map", "make_mesh", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """Per-device cost dict from a compiled executable.
+
+    Older jax returns a one-element list of dicts; newer returns the dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca
+
+
+def shard_map(f, *, check_vma=None, check_rep=None, **kwargs):
+    """``shard_map`` accepting either replication-check kwarg spelling."""
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        if "check_vma" in _SM_PARAMS:
+            kwargs["check_vma"] = flag
+        else:
+            kwargs["check_rep"] = flag
+    return _shard_map(f, **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, devices=None, auto_axes: bool = True):
+    """``jax.make_mesh`` with Auto axis_types where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if auto_axes and hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

@@ -23,7 +23,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 N, MEAN, M2, MIN, MAX = range(5)
@@ -118,14 +118,28 @@ def make_distributed_ad_step(
     alpha: float = DEFAULT_ALPHA,
     min_count: float = 10.0,
     use_pallas: bool = False,
+    func_axis: Optional[str] = None,
 ):
     """Build the pod-wide AD step: events sharded over ``axis_names``.
 
     Args to the returned fn:
-      table: (F, 5) replicated global table
+      table: (F, 5) global table — replicated when ``func_axis`` is None,
+             sharded ``P(func_axis)`` on dim 0 otherwise (F divisible by the
+             ``func_axis`` mesh size; see :func:`padded_num_funcs`)
       fids:  (R, E) int32, sharded over axis_names on dim 0
       durs:  (R, E) f32,   sharded likewise
-    Returns (new_table replicated, labels sharded like events).
+    Returns (new_table, labels sharded like events).
+
+    ``func_axis`` mirrors the host-side PS federation (core/ps.py) on the
+    mesh: each ``func_axis`` slice owns the contiguous fid block
+    [shard·Fs, (shard+1)·Fs) of the stats table, merges only its own rows
+    across ranks (psum over ``axis_names`` — per-shard PS work independent
+    of both rank count *and* total function count), and labels only the
+    events it owns; a psum over ``func_axis`` reassembles complete labels.
+    With a size-1 ``func_axis`` (or ``func_axis=None``) this degenerates to
+    the original single-instance all-reduce.  Contiguous blocks (not the
+    host PS's cyclic slices) keep each device's table rows dense for
+    VMEM/BlockSpec friendliness.
     """
     if use_pallas:
         from repro.kernels import ops as _kops
@@ -134,24 +148,60 @@ def make_distributed_ad_step(
     else:
         _batch = batch_table
 
-    def _shard_fn(table, fids, durs):
-        F = table.shape[0]
-        f = fids.reshape(-1)
-        d = durs.reshape(-1)
-        labels = label_events(table, f, d, alpha, min_count).reshape(fids.shape)
-        local = _batch(f, d, F)
-        global_delta = _merge_across(local, axis_names)
-        new_table = merge_tables(table, global_delta)
-        return new_table, labels
-
     ax = axis_names if isinstance(axis_names, tuple) else (axis_names,)
+
+    if func_axis is None:
+
+        def _shard_fn(table, fids, durs):
+            F = table.shape[0]
+            f = fids.reshape(-1)
+            d = durs.reshape(-1)
+            labels = label_events(table, f, d, alpha, min_count).reshape(fids.shape)
+            local = _batch(f, d, F)
+            global_delta = _merge_across(local, ax)
+            new_table = merge_tables(table, global_delta)
+            return new_table, labels
+
+        table_spec = P()
+    else:
+
+        def _shard_fn(table, fids, durs):
+            Fs = table.shape[0]  # this shard's contiguous block of fids
+            base = jax.lax.axis_index(func_axis) * Fs
+            f = fids.reshape(-1)
+            d = durs.reshape(-1)
+            # Rebase into shard-local rows; non-owned events become padding.
+            f_local = jnp.where((f >= base) & (f < base + Fs), f - base, -1)
+            owned_labels = label_events(table, f_local, d, alpha, min_count)
+            # Each event is owned by exactly one funcs shard — summing the
+            # per-shard label vectors reassembles the full labeling.
+            labels = (
+                jax.lax.psum(owned_labels.astype(jnp.int32), func_axis)
+                .astype(jnp.int8)
+                .reshape(fids.shape)
+            )
+            local = _batch(f_local, d, Fs)
+            shard_delta = _merge_across(local, ax)  # ranks only, per shard
+            new_table = merge_tables(table, shard_delta)
+            return new_table, labels
+
+        table_spec = P(func_axis)
+
     fn = shard_map(
         _shard_fn,
         mesh=mesh,
-        in_specs=(P(), P(ax), P(ax)),
-        out_specs=(P(), P(ax)),
+        in_specs=(table_spec, P(ax), P(ax)),
+        out_specs=(table_spec, P(ax)),
+        # pallas_call has no replication rule; the specs above are still
+        # sound (outputs are psum-reduced over the axes they omit).
+        check_rep=not use_pallas,
     )
     return jax.jit(fn)
+
+
+def padded_num_funcs(num_funcs: int, num_shards: int) -> int:
+    """Smallest F' >= num_funcs divisible by the funcs-axis mesh size."""
+    return -(-num_funcs // num_shards) * num_shards
 
 
 def straggler_scores(step_times: jnp.ndarray, alpha: float = 3.0) -> jnp.ndarray:

@@ -1,16 +1,36 @@
-"""Online AD parameter server (paper §III-B2).
+"""Online AD parameter-server federation (paper §III-B2).
 
 Maintains the global, workflow-level view: per-function runtime moments and
 per-(rank, frame) anomaly counts. Updates are *asynchronous* — clients push
 local deltas and immediately receive the current global snapshot; there are no
 synchronization barriers (Pébay merges are order-independent, see stats.py).
 
+Three layers, mirroring how the paper scales the PS on Summit by running
+multiple server instances so per-update PS work stays independent of rank
+count (§III-B2):
+
+  * :class:`ParameterServer` — the single-instance server (one lock, one
+    table).  Unchanged client API; the Fig. 7 staleness knob lives here.
+  * :class:`FederatedPS` — N :class:`PSShard` instances partitioned over
+    function-id space (cyclic slicing, see ``stats.partition_table``) behind
+    a front-end with the *same* client API.  A client push is routed to the
+    shards owning its non-empty rows, each guarded by its own lock, so
+    concurrent ranks rarely contend.  A periodic aggregation pass stitches
+    shard tables into the snapshot clients/viz read — lock-free, because
+    every shard mutation *replaces* its table array (``merge_moments``
+    allocates) and the aggregator only reads the atomically-swapped refs.
+  * :class:`BatchedPSClient` — client-side coalescing: several frame deltas
+    are merged locally (``stats.coalesce_deltas``) and pushed as one,
+    amortizing routing + lock acquisitions.  Between flushes the client sees
+    its own pending delta merged onto the last global snapshot, which keeps
+    labeling semantics close to the unbatched path (staleness < batch size).
+
 Threading model: many producer threads (one per simulated rank) may call
-``update_and_fetch`` concurrently; a single lock guards the merge. The lock
-scope is O(F) numpy work, matching the paper's observation that PS work per
-update is independent of the number of ranks. A ``staleness`` knob lets tests
-emulate delayed snapshots (clients seeing slightly-old global state), which is
-the regime the 97.6%-accuracy comparison in Fig. 7 exercises.
+``update_and_fetch`` concurrently; locks guard only O(F/S) numpy work. A
+``staleness`` knob on the single server lets tests emulate delayed snapshots
+(clients seeing slightly-old global state), which is the regime the
+97.6%-accuracy comparison in Fig. 7 exercises; ``aggregate_every`` plays the
+same role for the federation.
 """
 from __future__ import annotations
 
@@ -22,7 +42,16 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .stats import StatsTable, merge_moments
+from .stats import (
+    N,
+    StatsTable,
+    assemble_shards,
+    coalesce_deltas,
+    empty_table,
+    merge_moments,
+    pad_table,
+    shard_rows,
+)
 
 
 @dataclasses.dataclass
@@ -33,19 +62,64 @@ class RankFrameStat:
     ts: float
 
 
-class ParameterServer:
-    """Thread-safe global stats store + anomaly bookkeeping for the viz."""
+class AnomalyFeed:
+    """Per-(rank, frame) anomaly bookkeeping + viz subscriptions.
+
+    Shared by the single server and the federation front-end; guarded by its
+    own lock so stats-table traffic never contends with viz queries.
+    """
+
+    def __init__(self) -> None:
+        self._feed_lock = threading.Lock()
+        self.anomaly_series: Dict[int, List[RankFrameStat]] = defaultdict(list)
+        self._subscribers: List[Callable[[dict], None]] = []
+
+    def report_anomalies(self, rank: int, step: int, n_anomalies: int) -> None:
+        stat = RankFrameStat(rank, step, n_anomalies, time.time())
+        with self._feed_lock:
+            self.anomaly_series[rank].append(stat)
+            subs = list(self._subscribers)
+        for cb in subs:  # viz broadcast (paper: periodic push to viz server)
+            cb({"rank": rank, "step": step, "n_anomalies": n_anomalies})
+
+    def subscribe(self, cb: Callable[[dict], None]) -> None:
+        self._subscribers.append(cb)
+
+    # ------------------------------------------------------------------ viz
+    def rank_dashboard(self) -> Dict[int, Dict[str, float]]:
+        """Fig. 3 data: per-rank {avg, std, max, min, total} anomaly counts."""
+        out = {}
+        with self._feed_lock:
+            for rank, series in self.anomaly_series.items():
+                xs = np.asarray([s.n_anomalies for s in series], np.float64)
+                if xs.size == 0:
+                    continue
+                out[rank] = {
+                    "average": float(xs.mean()),
+                    "stddev": float(xs.std()),
+                    "maximum": float(xs.max()),
+                    "minimum": float(xs.min()),
+                    "total": float(xs.sum()),
+                }
+        return out
+
+    def frame_series(self, rank: int) -> List[Tuple[int, int]]:
+        """Fig. 4 data: (step, n_anomalies) stream for one rank."""
+        with self._feed_lock:
+            return [(s.step, s.n_anomalies) for s in self.anomaly_series[rank]]
+
+
+class ParameterServer(AnomalyFeed):
+    """Thread-safe single-instance stats store (the degenerate 1-shard PS)."""
 
     def __init__(self, num_funcs: int, staleness: int = 0):
+        super().__init__()
         self.global_stats = StatsTable(num_funcs)
         self._lock = threading.Lock()
         self._staleness = staleness
         self._snapshots: Deque[np.ndarray] = deque(maxlen=max(staleness, 1))
         self._snapshots.append(self.global_stats.table.copy())
-        # viz feeds -----------------------------------------------------
-        self.anomaly_series: Dict[int, List[RankFrameStat]] = defaultdict(list)
         self.n_updates = 0
-        self._subscribers: List[Callable[[dict], None]] = []
 
     # --------------------------------------------------------------- client
     def update_and_fetch(
@@ -62,52 +136,238 @@ class ParameterServer:
             out = self._snapshots[0] if self._staleness > 0 else snap
         return out
 
-    def report_anomalies(self, rank: int, step: int, n_anomalies: int) -> None:
-        stat = RankFrameStat(rank, step, n_anomalies, time.time())
-        with self._lock:
-            self.anomaly_series[rank].append(stat)
-            subs = list(self._subscribers)
-        for cb in subs:  # viz broadcast (paper: periodic push to viz server)
-            cb({"rank": rank, "step": step, "n_anomalies": n_anomalies})
-
-    def subscribe(self, cb: Callable[[dict], None]) -> None:
-        self._subscribers.append(cb)
-
-    # ------------------------------------------------------------------ viz
-    def rank_dashboard(self) -> Dict[int, Dict[str, float]]:
-        """Fig. 3 data: per-rank {avg, std, max, min, total} anomaly counts."""
-        out = {}
-        with self._lock:
-            for rank, series in self.anomaly_series.items():
-                xs = np.asarray([s.n_anomalies for s in series], np.float64)
-                if xs.size == 0:
-                    continue
-                out[rank] = {
-                    "average": float(xs.mean()),
-                    "stddev": float(xs.std()),
-                    "maximum": float(xs.max()),
-                    "minimum": float(xs.min()),
-                    "total": float(xs.sum()),
-                }
-        return out
-
-    def frame_series(self, rank: int) -> List[Tuple[int, int]]:
-        """Fig. 4 data: (step, n_anomalies) stream for one rank."""
-        with self._lock:
-            return [(s.step, s.n_anomalies) for s in self.anomaly_series[rank]]
-
     def snapshot(self) -> StatsTable:
         with self._lock:
             return StatsTable(self.global_stats.num_funcs, self.global_stats.table.copy())
 
     def _pad(self, delta: np.ndarray) -> np.ndarray:
-        if delta.shape[0] == self.global_stats.num_funcs:
-            return delta
-        from .stats import empty_table
+        return pad_table(delta, self.global_stats.num_funcs)
 
-        t = empty_table(self.global_stats.num_funcs)
-        t[: delta.shape[0]] = delta
-        return t
+
+class PSShard:
+    """One PS instance owning the cyclic fid slice ``{shard, shard+S, ...}``.
+
+    Holds ``shard_rows(F, shard, S)`` rows of the global table behind its own
+    lock.  Mutations go through ``merge_moments``, which allocates a fresh
+    array — so ``self.stats.table`` is an atomically-swapped immutable-by-
+    convention ref that the federation's aggregation pass may read without
+    taking the lock.
+    """
+
+    def __init__(self, shard_id: int, num_shards: int, num_funcs: int):
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self.stats = StatsTable(shard_rows(num_funcs, shard_id, num_shards))
+        self.lock = threading.Lock()
+        self.n_pushes = 0
+
+    def push(self, rows: np.ndarray) -> None:
+        """Merge a (rows_s, 7) delta block (already shard-local rows)."""
+        with self.lock:
+            if rows.shape[0] > self.stats.num_funcs:
+                self.stats.grow(rows.shape[0])
+            self.stats.merge_array(pad_table(rows, self.stats.num_funcs))
+            self.n_pushes += 1
+
+    def grow(self, num_rows: int) -> None:
+        with self.lock:
+            self.stats.grow(num_rows)
+
+    def peek_table(self) -> np.ndarray:
+        """Lock-free read of the current shard table (atomic ref load)."""
+        return self.stats.table
+
+
+class FederatedPS(AnomalyFeed):
+    """Front-end over N fid-sharded PS instances — same client API.
+
+    ``update_and_fetch`` routes the rows of a client's (F, 7) delta to the
+    owning shards (strided views, no copies) and returns the *aggregated*
+    global snapshot.  The aggregate is refreshed at most every
+    ``aggregate_every`` pushes by whichever client crosses the threshold —
+    a lock-free stitch over the shards' published tables — so fetches are
+    O(1) in the common case instead of O(F) copies per update.  Clients
+    therefore see snapshots up to ``aggregate_every`` pushes stale, which is
+    exactly the asynchronous-updates regime the paper runs (§III-B2, Fig. 7).
+
+    ``snapshot()`` always forces a fresh aggregation: offline consumers (viz
+    dumps, equivalence tests) get the exact union of all pushed deltas,
+    bit-matching a single :class:`ParameterServer` fed the same stream.
+    """
+
+    def __init__(
+        self,
+        num_funcs: int,
+        num_shards: int = 4,
+        aggregate_every: int = 16,
+    ):
+        super().__init__()
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
+        self._num_funcs = num_funcs
+        self.shards = [PSShard(s, num_shards, num_funcs) for s in range(num_shards)]
+        self._aggregate_every = max(int(aggregate_every), 1)
+        self._size_lock = threading.Lock()  # guards _num_funcs growth
+        self._count_lock = threading.Lock()  # guards n_updates / refresh decision
+        self.n_updates = 0
+        self._agg_at = 0  # n_updates value the cached aggregate reflects
+        self._refresh_gen = 0  # guards against stale refreshes publishing
+        self._agg = empty_table(num_funcs)  # cached global snapshot (COW ref)
+
+    # --------------------------------------------------------------- sizing
+    @property
+    def num_funcs(self) -> int:
+        return self._num_funcs
+
+    def _ensure_capacity(self, num_funcs: int) -> None:
+        if num_funcs <= self._num_funcs:
+            return
+        with self._size_lock:
+            if num_funcs <= self._num_funcs:
+                return
+            for shard in self.shards:
+                shard.grow(shard_rows(num_funcs, shard.shard_id, self.num_shards))
+            self._num_funcs = num_funcs
+
+    # --------------------------------------------------------------- client
+    def update_and_fetch(
+        self, rank: int, step: int, delta: np.ndarray
+    ) -> Optional[np.ndarray]:
+        """Route a delta's rows to their shards; return the cached aggregate."""
+        self._ensure_capacity(delta.shape[0])
+        S = self.num_shards
+        # One O(F) pass finds the shards this frame touched (rows with n > 0)
+        # so untouched shards see neither a lock acquisition nor a merge.
+        touched = np.unique(np.nonzero(delta[:, N] > 0)[0] % S) if S > 1 else (0,)
+        for s in touched:
+            shard = self.shards[s]
+            rows = delta[shard.shard_id :: S]
+            if rows.shape[0]:
+                shard.push(rows)
+        with self._count_lock:
+            self.n_updates += 1
+            refresh = self.n_updates - self._agg_at >= self._aggregate_every
+            if refresh:
+                # Reserve the refresh window so concurrent pushes don't all
+                # start their own O(F) aggregation while this one runs.
+                self._agg_at = self.n_updates
+        if refresh:
+            self._refresh_aggregate()
+        # Pad at read time: clients copy the snapshot over their global view
+        # and index it by fid, so it must never have fewer rows than the
+        # delta they just pushed (the cached aggregate may predate a grow).
+        return pad_table(self._agg, self._num_funcs)
+
+    # ---------------------------------------------------------- aggregation
+    def _build_aggregate(self) -> np.ndarray:
+        """Lock-free global pass: stitch shard tables into one (F, 7) table.
+
+        Reads each shard's atomically-published table ref without taking
+        shard locks; concurrent pushes land in the *next* refresh.  The
+        stitch itself is ``assemble_shards`` — per-row ``merge_moments``
+        against empty rows, bitwise-exact.
+        """
+        tables = [shard.peek_table() for shard in self.shards]
+        return assemble_shards(tables, self._num_funcs)
+
+    def _refresh_aggregate(self) -> None:
+        with self._count_lock:
+            self._refresh_gen += 1
+            gen = self._refresh_gen
+        agg = self._build_aggregate()
+        with self._count_lock:
+            # Only publish if no newer refresh started meanwhile — a slow
+            # older pass must not overwrite a fresher aggregate.
+            if gen == self._refresh_gen:
+                self._agg = agg  # atomic ref swap; readers never see torn state
+
+    def snapshot(self) -> StatsTable:
+        """Force a fresh aggregation and return it (offline/exact path)."""
+        agg = pad_table(self._build_aggregate(), self._num_funcs)
+        return StatsTable(agg.shape[0], agg.copy())
+
+    @property
+    def n_shard_pushes(self) -> int:
+        return sum(shard.n_pushes for shard in self.shards)
+
+    def shard_load(self) -> List[int]:
+        """Per-shard push counts — the load-balance view of the federation."""
+        return [shard.n_pushes for shard in self.shards]
+
+
+class BatchedPSClient:
+    """Client-side delta coalescing for any PS with ``update_and_fetch``.
+
+    Buffers up to ``batch_frames`` per-frame deltas, merging them locally
+    with Pébay merges (no locks — the client is single-threaded per rank),
+    then pushes the coalesced delta in one server round-trip.  Between
+    flushes, fetches return the *last* global snapshot unchanged — up to
+    ``batch_frames - 1`` frames stale, the paper's asynchronous regime —
+    which keeps the non-flush path allocation-light (one accumulate merge
+    per frame, no locks, no view rebuilds).  Callers that want the freshest
+    possible view (stale global ⊕ pending local) can ask for :meth:`view`.
+
+    Not thread-safe: one instance per producing rank, by design.
+    """
+
+    def __init__(self, ps, rank: int, batch_frames: int = 8):
+        self.ps = ps
+        self.rank = rank
+        self.batch_frames = max(int(batch_frames), 1)
+        self._pending: Optional[np.ndarray] = None
+        self._pending_count = 0
+        self._last_global: Optional[np.ndarray] = None
+        self.n_flushes = 0
+
+    # --------------------------------------------------------------- client
+    def update_and_fetch(
+        self, rank: int, step: int, delta: np.ndarray
+    ) -> Optional[np.ndarray]:
+        if self._pending is None:
+            self._pending = delta.copy()
+        elif delta.shape[0] == self._pending.shape[0]:
+            self._pending = merge_moments(self._pending, delta)
+        else:
+            self._pending = coalesce_deltas([self._pending, delta])
+        self._pending_count += 1
+        if self._pending_count >= self.batch_frames:
+            return self.flush(step)
+        last = self._last_global
+        if last is None:
+            return self._pending
+        # New fids may have grown the local table since the last flush; pad
+        # the stale snapshot so callers never see fewer rows than they push
+        # (they copy it over their global view and index it by fid).
+        self._last_global = last = pad_table(last, self._pending.shape[0])
+        return last
+
+    def view(self) -> Optional[np.ndarray]:
+        """Freshest client view: last global snapshot ⊕ pending local delta."""
+        if self._pending is None:
+            return self._last_global
+        if self._last_global is None:
+            return self._pending
+        return coalesce_deltas([self._last_global, self._pending])
+
+    def flush(self, step: int = -1) -> Optional[np.ndarray]:
+        """Push the coalesced pending delta; returns the fresh global view."""
+        if self._pending is None:
+            return self._last_global
+        snap = self.ps.update_and_fetch(self.rank, step, self._pending)
+        self._pending = None
+        self._pending_count = 0
+        self.n_flushes += 1
+        if snap is not None:
+            self._last_global = snap
+        return self._last_global
+
+    # ------------------------------------------------- passthroughs for viz
+    def report_anomalies(self, rank: int, step: int, n_anomalies: int) -> None:
+        self.ps.report_anomalies(rank, step, n_anomalies)
+
+    def subscribe(self, cb: Callable[[dict], None]) -> None:
+        self.ps.subscribe(cb)
 
 
 class NonDistributedAD:

@@ -36,6 +36,18 @@ def empty_table(num_funcs: int) -> np.ndarray:
     return t
 
 
+def pad_table(table: np.ndarray, num_funcs: int) -> np.ndarray:
+    """Return ``table`` extended with empty rows up to ``num_funcs``.
+
+    Returns the input unchanged (no copy) when it is already big enough.
+    """
+    if table.shape[0] >= num_funcs:
+        return table
+    t = empty_table(num_funcs)
+    t[: table.shape[0]] = table
+    return t
+
+
 def batch_moments(values: np.ndarray) -> np.ndarray:
     """Exact (1, 7) moment row for a batch of values."""
     row = empty_table(1)[0]
@@ -90,11 +102,71 @@ def merge_moments(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     )
     out[..., MIN] = np.minimum(a[..., MIN], b[..., MIN])
     out[..., MAX] = np.maximum(a[..., MAX], b[..., MAX])
+    # A merge with an empty operand is a bitwise copy of the other side —
+    # the formulas above would round MEAN twice via (μ n)/n.  Exactness here
+    # is what lets a sharded/federated merge bit-match the single-table path.
+    empty_a = np.broadcast_to((na == 0)[..., None], out.shape)
+    out = np.where(empty_a, np.broadcast_to(b, out.shape), out)
+    empty_b = np.broadcast_to((nb == 0)[..., None], out.shape)
+    out = np.where(empty_b & ~empty_a, np.broadcast_to(a, out.shape), out)
     # Empty + empty stays a proper empty row.
     zero = n == 0
     if np.any(zero):
         out[zero] = empty_table(1)[0]
     return out
+
+
+# --------------------------------------------------------------- federation
+# Function-id space is partitioned over PS shards *cyclically*: shard ``s``
+# of ``S`` owns global fids {s, s+S, s+2S, ...}.  Cyclic slicing is stable
+# under table growth (a new fid maps to a shard without repartitioning any
+# existing row) and maps to numpy strided views, so routing a delta to its
+# shards is ``delta[s::S]`` — no copies, no index arrays.
+
+
+def shard_rows(num_funcs: int, shard: int, num_shards: int) -> int:
+    """Number of global fids < ``num_funcs`` owned by ``shard``."""
+    return len(range(shard, num_funcs, num_shards))
+
+
+def partition_table(table: np.ndarray, num_shards: int) -> list:
+    """Split a (F, 7) table into per-shard row blocks (cyclic slicing)."""
+    return [table[s::num_shards] for s in range(num_shards)]
+
+
+def assemble_shards(shards, num_funcs: int) -> np.ndarray:
+    """Inverse of :func:`partition_table`: interleave shard blocks back into
+    a global (F, 7) table via :func:`merge_moments` against an empty table.
+
+    Because shards own disjoint fid rows, each merge folds a shard's rows
+    into still-empty destination rows — so the result is exact (bitwise: an
+    empty-row merge reduces to copying the non-empty operand's moments).
+    """
+    num_shards = len(shards)
+    out = empty_table(num_funcs)
+    for s, block in enumerate(shards):
+        expand = empty_table(num_funcs)
+        rows = min(block.shape[0], shard_rows(num_funcs, s, num_shards))
+        expand[s::num_shards][:rows] = block[:rows]
+        out = merge_moments(out, expand)
+    return out
+
+
+def coalesce_deltas(deltas) -> np.ndarray:
+    """Fold several (F, 7) frame deltas into one with pairwise merges.
+
+    This is what a batching PS client sends instead of per-frame pushes:
+    one merged delta amortizes routing + lock acquisition on the server.
+    Exact up to float associativity (Pébay merges are assoc/comm).
+    """
+    deltas = list(deltas)
+    if not deltas:
+        raise ValueError("coalesce_deltas needs at least one delta")
+    F = max(d.shape[0] for d in deltas)
+    out = pad_table(deltas[0], F)
+    for d in deltas[1:]:
+        out = merge_moments(out, pad_table(d, F))
+    return out if len(deltas) > 1 else out.copy()
 
 
 @dataclasses.dataclass

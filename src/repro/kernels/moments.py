@@ -18,6 +18,16 @@ Blocks: EB=512 events; F ≤ 2048 functions per table tile (the (EB, F)
 one-hot peaks at 512×2048×4 B = 4 MiB of VMEM).
 
 Padding: fid < 0 marks padding events (weight 0, label 0).
+
+Federation: PS shards own contiguous fid blocks [offset, offset + F).  For
+callers whose shard offset is a static Python int (host-driven per-shard
+reductions over one event stream), ``fid_offset`` rebases global fids into
+shard-local rows inside the kernel; events outside the block are masked out
+exactly like padding, so a shard's delta covers only the rows it owns.  The
+traced ``func_axis`` path in core/jax_ad.py gets its offset from
+``axis_index`` (dynamic), so it rebases with a ``jnp.where`` before the call
+and keeps ``fid_offset=0`` — the in-kernel bounds masking still drops the
+out-of-shard events it maps to -1.
 """
 from __future__ import annotations
 
@@ -35,7 +45,7 @@ POS = 1e30
 
 def _moments_kernel(
     fids_ref, durs_ref, table_ref, out_ref, labels_ref, acc_ref,
-    *, alpha: float, min_count: float, F: int,
+    *, alpha: float, min_count: float, F: int, fid_offset: int,
 ):
     ib = pl.program_id(0)
     nb = pl.num_programs(0)
@@ -46,9 +56,9 @@ def _moments_kernel(
         acc_ref[:, 3] = jnp.full((F,), POS, jnp.float32)
         acc_ref[:, 4] = jnp.full((F,), NEG, jnp.float32)
 
-    fids = fids_ref[...]  # (EB,) int32
+    fids = fids_ref[...] - fid_offset  # (EB,) int32, rebased to shard rows
     x = durs_ref[...]  # (EB,) f32
-    valid = fids >= 0
+    valid = (fids >= 0) & (fids < F)  # padding + out-of-shard events drop out
     w = valid.astype(jnp.float32)
     EB = fids.shape[0]
 
@@ -95,11 +105,14 @@ def moments_and_labels(
     alpha: float = 6.0,
     min_count: float = 10.0,
     block_events: int = 512,
+    fid_offset: int = 0,
     interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """-> (delta table (F,5) [n,Σx,Σx²,min,max], labels (N,) int8).
 
     ``table_sums`` is the previous global table in raw-sums format.
+    ``fid_offset`` rebases global fids: the delta covers the contiguous
+    shard block [fid_offset, fid_offset + F); other events are masked.
     """
     N = fids.shape[0]
     F = table_sums.shape[0]
@@ -110,7 +123,8 @@ def moments_and_labels(
         durs = jnp.concatenate([durs, jnp.zeros((pad,), durs.dtype)])
     nb = fids.shape[0] // EB
     kernel = functools.partial(
-        _moments_kernel, alpha=alpha, min_count=min_count, F=F
+        _moments_kernel, alpha=alpha, min_count=min_count, F=F,
+        fid_offset=fid_offset,
     )
     delta, labels = pl.pallas_call(
         kernel,

@@ -59,11 +59,18 @@ def moments_update(
     return new_table, labels
 
 
-def moments_table(fids: jnp.ndarray, durs: jnp.ndarray, F: int) -> jnp.ndarray:
-    """Kernel-backed batch_table (distributed AD's local reduction)."""
+def moments_table(
+    fids: jnp.ndarray, durs: jnp.ndarray, F: int, fid_offset: int = 0
+) -> jnp.ndarray:
+    """Kernel-backed batch_table (distributed AD's local reduction).
+
+    With ``fid_offset``, computes the delta for the contiguous PS-shard
+    block [fid_offset, fid_offset + F) only — the federated per-shard
+    segment reduction (events outside the block are masked in-kernel).
+    """
     zero = jnp.zeros((F, 5), jnp.float32)
     delta, _ = _mo.moments_and_labels(
-        fids, durs, zero, interpret=_interpret()
+        fids, durs, zero, fid_offset=fid_offset, interpret=_interpret()
     )
     return sums_to_stats(delta)
 

@@ -49,7 +49,9 @@ def probe_costs(cfg, shape: str, mesh, opts_kw, microbatch: int) -> dict:
         opts = StepOptions(**{**opts_kw, "probe": True, "microbatch": microbatch})
         cell = make_cell(pcfg, shape, mesh, opts)
         compiled = cell.lower().compile()
-        ca = compiled.cost_analysis()
+        from repro.compat import cost_analysis as _ca_compat
+
+        ca = _ca_compat(compiled)
         coll = R.collective_bytes(compiled.as_text())
         vals[npd] = {
             "flops": float(ca.get("flops", 0.0)),
@@ -138,9 +140,9 @@ def run_cell(
 
     # ---- cost ----------------------------------------------------------
     try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
+        from repro.compat import cost_analysis as _ca_compat
+
+        ca = _ca_compat(compiled)
         rec["cost"] = {
             "flops": float(ca.get("flops", -1.0)),
             "bytes_accessed": float(ca.get("bytes accessed", -1.0)),

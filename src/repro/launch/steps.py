@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro import configs
 from repro.data.pipeline import batch_spec as data_batch_spec
 from repro.models import model as M
@@ -195,7 +197,7 @@ def make_dp_train_step(
     state_struct = jax.eval_shape(functools.partial(make_train_state, cfg))
     rep = jax.tree.map(lambda _: P(), state_struct)
     err_spec_leaf = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         _local,
         mesh=mesh,
         in_specs=(rep, jax.tree.map(lambda _: err_spec_leaf, state_struct["params"]),

@@ -95,6 +95,9 @@ def train(
         if step % log_every == 0:
             print(f"[train] step {step:5d} loss {loss:.4f} {dt*1e3:.0f} ms")
         if fail_at is not None and step + 1 == fail_at:
+            if mgr is not None:
+                mgr.wait()  # fail-stop after in-flight async save settles,
+                # so the injected failure is deterministic for resume tests
             print(f"[train] simulated failure at step {step + 1}")
             raise RuntimeError("injected node failure")
 

@@ -18,6 +18,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from .common import ModelConfig
 
 
@@ -178,7 +180,7 @@ def mamba_mixer_seq_parallel(
             out = out + xc[:, j : j + xr.shape[1]] * cw[j]
         return out + cb
 
-    x = jax.shard_map(
+    x = shard_map(
         halo_conv, mesh=ctx.mesh,
         in_specs=(P(b, m_ax, None), P(), P()), out_specs=P(b, m_ax, None),
         check_vma=False,
@@ -205,7 +207,7 @@ def mamba_mixer_seq_parallel(
         y_fix = _h0_correction(dtr, Cmr, A, h_in, chunk=chunk)
         return (y0 + y_fix).astype(u.dtype)
 
-    y = jax.shard_map(
+    y = shard_map(
         sharded_scan, mesh=ctx.mesh,
         in_specs=(P(b, m_ax, None),) * 4 + (P(),),
         out_specs=P(b, m_ax, None),

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from . import layers as L
 from .common import DENSE, FULL, MAMBA, MLA, MOE, NONE, SWA, LayerSpec, ModelConfig
 from .mamba import init_mamba_state, mamba_decode, mamba_sequence
@@ -153,7 +155,7 @@ def _attention_seq_parallel(
             q_offset=off, chunk_q=cq, chunk_k=ck,
         )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(
@@ -257,7 +259,7 @@ def _mlp_apply(cfg, spec, p, h, ctx: ShardCtx):
     if spec.mlp == MOE:
         ep = ctx.ep_info(cfg)
         if ep is not None:
-            fn = jax.shard_map(
+            fn = shard_map(
                 lambda pr, xr: moe_block(pr, xr, cfg, ep),
                 mesh=ctx.mesh,
                 in_specs=(
@@ -488,7 +490,7 @@ def _attn_decode_sharded(cfg, spec, p, q, k_new, v_new, cache, pos, ctx):
         out = out.transpose(0, 3, 1, 2, 4).reshape(B // (1 if b is None else _prod(ctx.mesh, b)), 1, H * hd)
         return out.astype(qr.dtype), kc, vc, kposc
 
-    fn = jax.shard_map(
+    fn = shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(
@@ -550,7 +552,7 @@ def _mla_decode_sharded(cfg, p, q_eff, q_rope, ckv_new, krope_new, cache, pos, c
         lat = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).transpose(0, 2, 1, 3)
         return lat, cc, kc
 
-    fn = jax.shard_map(
+    fn = shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(

@@ -19,7 +19,7 @@ import numpy as np
 from repro.core.ad import ADFrameResult, OnNodeAD
 from repro.core.events import Frame, FunctionRegistry
 from repro.core.provenance import ProvenanceDB
-from repro.core.ps import ParameterServer
+from repro.core.ps import BatchedPSClient, FederatedPS, ParameterServer
 from repro.core.reduction import Reducer, merge_stats
 from repro.core.stats import RunningStats
 
@@ -45,9 +45,22 @@ class ChimbukoMonitor:
         straggler_min_steps: int = 10,
         algorithm: str = "sstd",
         run_info: Optional[dict] = None,
+        ps_shards: int = 1,
+        ps_batch_frames: int = 1,
+        ps_aggregate_every: int = 16,
     ):
         self.registry = registry or FunctionRegistry()
-        self.ps = ParameterServer(num_funcs)
+        # PS federation (paper §III-B2): with ps_shards > 1 the stats table
+        # is partitioned over fid space across shard instances; clients can
+        # additionally coalesce ps_batch_frames deltas per push.
+        if ps_shards > 1:
+            self.ps = FederatedPS(
+                num_funcs, num_shards=ps_shards, aggregate_every=ps_aggregate_every
+            )
+        else:
+            self.ps = ParameterServer(num_funcs)
+        self._ps_batch_frames = max(int(ps_batch_frames), 1)
+        self._ps_clients: Dict[int, object] = {}
         self._num_funcs = num_funcs
         self._alpha = alpha
         self._min_samples = min_samples
@@ -70,8 +83,13 @@ class ChimbukoMonitor:
     # ------------------------------------------------------------- trace AD
     def _ad(self, rank: int) -> OnNodeAD:
         if rank not in self.ads:
+            if self._ps_batch_frames > 1:
+                client = BatchedPSClient(self.ps, rank, self._ps_batch_frames)
+                self._ps_clients[rank] = client
+            else:
+                client = self.ps
             self.ads[rank] = OnNodeAD(
-                self._num_funcs, rank=rank, ps_client=self.ps,
+                self._num_funcs, rank=rank, ps_client=client,
                 alpha=self._alpha, min_samples=self._min_samples,
                 algorithm=self._algorithm,
             )
@@ -117,7 +135,7 @@ class ChimbukoMonitor:
 
     def summary(self) -> dict:
         red = self.reduction_stats()
-        return {
+        out = {
             "frames": sum(ad.frames_seen for ad in self.ads.values()),
             "events": sum(ad.builder.n_events for ad in self.ads.values()),
             "anomalies": sum(ad.n_anomalies_total for ad in self.ads.values()),
@@ -128,6 +146,16 @@ class ChimbukoMonitor:
             "stragglers": len(self.stragglers),
             "ps_updates": self.ps.n_updates,
         }
+        if isinstance(self.ps, FederatedPS):
+            out["ps_shards"] = self.ps.num_shards
+            out["ps_shard_pushes"] = self.ps.n_shard_pushes
+        return out
+
+    def flush_ps(self) -> None:
+        """Push any deltas still buffered in batching PS clients."""
+        for client in self._ps_clients.values():
+            client.flush()
 
     def close(self) -> None:
+        self.flush_ps()
         self.provdb.close()

@@ -10,6 +10,12 @@ below).  A JSON dump stands in for the websocket broadcast.
   function_view     Fig. 5: executed functions of one (rank, frame) with
                     selectable axes (entry/exit/runtime/fid/label/children/messages)
   call_stack_view   Fig. 6: call stack around an anomaly with comm arrows
+
+JSON schemas for all four endpoints (and which paper figure each
+reproduces) are documented in docs/viz.md.  The endpoints are agnostic to
+the PS topology: a sharded ``FederatedPS`` serves them through the same
+``AnomalyFeed`` interface as the single-instance server, and its stats
+snapshots come from the federation's lock-free aggregation pass.
 """
 from __future__ import annotations
 

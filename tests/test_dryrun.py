@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.compat import cost_analysis
 from repro.launch import roofline as R
 
 
@@ -19,14 +20,14 @@ def test_cost_analysis_counts_loop_bodies_once():
         return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=n)[0]
 
     x = jnp.ones((256, 256))
-    f4 = jax.jit(f, static_argnums=1).lower(x, 4).compile().cost_analysis()["flops"]
-    f8 = jax.jit(f, static_argnums=1).lower(x, 8).compile().cost_analysis()["flops"]
+    f4 = cost_analysis(jax.jit(f, static_argnums=1).lower(x, 4).compile())["flops"]
+    f8 = cost_analysis(jax.jit(f, static_argnums=1).lower(x, 8).compile())["flops"]
     assert f4 == f8  # loop body counted once regardless of trip count
     # unrolled scan counts every iteration
     def fu(x, n):
         return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=n, unroll=True)[0]
 
-    u8 = jax.jit(fu, static_argnums=1).lower(x, 8).compile().cost_analysis()["flops"]
+    u8 = cost_analysis(jax.jit(fu, static_argnums=1).lower(x, 8).compile())["flops"]
     assert u8 >= 7.5 * f4 / 8 * 8  # ≈ 8 bodies counted
 
 
@@ -86,15 +87,16 @@ from repro import configs
 from repro.launch.steps import StepOptions, make_cell
 from repro.launch.dryrun import probe_costs
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 configs.SHAPES["mini_train"] = configs.ShapeCell("mini_train", 64, 8, "train")
 cfg = configs.smoke("gemma2-2b")  # period 2, smoke n_layers = 4 (2 periods)
 probe = probe_costs(cfg, "mini_train", mesh, {}, 1)
 
 # ground truth: full model with every scan unrolled, cost counted directly
 full = make_cell(cfg, "mini_train", mesh, StepOptions(probe=True, microbatch=1))
-ca = full.lower().compile().cost_analysis()
+from repro.compat import cost_analysis
+ca = cost_analysis(full.lower().compile())
 direct = float(ca["flops"])
 extrap = probe["flops"]
 rel = abs(extrap - direct) / direct
@@ -107,7 +109,7 @@ def test_probe_extrapolation_matches_unrolled():
     """C(1) + (NP−1)(C(2)−C(1)) == fully-unrolled cost (affine exactness)."""
     r = subprocess.run(
         [sys.executable, "-c", _PROBE_SCRIPT], capture_output=True, text=True,
-        timeout=560, env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        timeout=560, env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "PROBE_EXTRAPOLATION_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-3000:]
 
@@ -119,8 +121,8 @@ import jax
 import dataclasses
 from repro import configs
 from repro.launch.steps import StepOptions, make_cell
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 configs.SHAPES["mini"] = configs.ShapeCell("mini", 64, 8, "train")
 configs.SHAPES["mini_dec"] = configs.ShapeCell("mini_dec", 64, 8, "decode")
 for arch in ("jamba-v0.1-52b", "qwen3-moe-30b-a3b", "minicpm3-4b"):
@@ -136,7 +138,7 @@ def test_mini_mesh_cells_compile():
     """Representative archs × (train, decode) lower+compile on a 3-axis mesh."""
     r = subprocess.run(
         [sys.executable, "-c", _MESH_SCRIPT], capture_output=True, text=True,
-        timeout=560, env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        timeout=560, env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "MINI_MESH_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-3000:]
 

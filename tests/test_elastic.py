@@ -15,6 +15,8 @@ from repro.launch import sharding as SH
 from repro.launch.steps import StepOptions, build_train_step, make_shard_ctx, make_train_state
 from repro.optim.adamw import OptConfig
 
+from repro.compat import make_mesh
+
 cfg = configs.smoke("gemma-2b")
 opts = StepOptions(ce_chunk=512, opt=OptConfig(peak_lr=1e-3, warmup_steps=5))
 GB, SEQ = 8, 32
@@ -35,7 +37,7 @@ state0 = make_train_state(cfg, 0)
 _, ref_losses = run_steps(None, make_train_state(cfg, 0), 0, 12)
 
 # phase 1: mesh A = (4 data, 2 model)
-mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_a = make_mesh((4, 2), ("data", "model"))
 sh_a = {
     "params": SH.param_shardings(cfg, jax.eval_shape(lambda: state0["params"]), mesh_a),
 }
@@ -44,7 +46,7 @@ state, l_a = run_steps(mesh_a, state, 0, 6)
 CK.save("/tmp/elastic_ck", 6, state)
 
 # phase 2 ("after node loss"): mesh B = (2 data, 4 model), restored + resharded
-mesh_b = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = make_mesh((2, 4), ("data", "model"))
 target = jax.eval_shape(functools.partial(make_train_state, cfg))
 shards_b = {
     "params": SH.param_shardings(cfg, target["params"], mesh_b),
@@ -66,6 +68,6 @@ print("ELASTIC_OK", err)
 def test_elastic_mesh_rescale():
     r = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        timeout=560, env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        timeout=560, env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "ELASTIC_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-3000:]

@@ -1,0 +1,286 @@
+"""PS federation: shard routing, batching, aggregation, on-device mirror."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import stats as S
+from repro.core.ps import BatchedPSClient, FederatedPS, ParameterServer
+from repro.core.stats import StatsTable
+
+
+def _random_deltas(rng, n_ranks, frames, F, grow_to=None):
+    """Per-(rank, frame) delta tables from random event batches."""
+    out = []
+    for t in range(frames):
+        for r in range(n_ranks):
+            Ft = F if grow_to is None or t < frames // 2 else grow_to
+            n = int(rng.integers(0, 80))
+            fids = rng.integers(0, Ft, n)
+            vals = rng.lognormal(3.0, 1.0, n)
+            out.append((r, t, StatsTable(Ft).update_batch(fids, vals)))
+    return out
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 4, 8])
+def test_federated_bitmatches_single(num_shards):
+    """Federated merge of random event streams == one global StatsTable."""
+    rng = np.random.default_rng(num_shards)
+    F = 37
+    single = ParameterServer(F)
+    fed = FederatedPS(F, num_shards=num_shards, aggregate_every=7)
+    for r, t, d in _random_deltas(rng, n_ranks=6, frames=30, F=F):
+        single.update_and_fetch(r, t, d)
+        fed.update_and_fetch(r, t, d)
+    assert np.array_equal(single.snapshot().table, fed.snapshot().table)
+    assert fed.n_updates == single.n_updates
+
+
+def test_federated_bitmatch_with_growth():
+    """Cyclic slicing is stable when new fids grow the table mid-stream."""
+    rng = np.random.default_rng(11)
+    F, F2 = 20, 53
+    single = ParameterServer(F)
+    fed = FederatedPS(F, num_shards=4)
+    for r, t, d in _random_deltas(rng, n_ranks=4, frames=24, F=F, grow_to=F2):
+        single.update_and_fetch(r, t, d)
+        fed.update_and_fetch(r, t, d)
+    assert fed.num_funcs == F2
+    assert np.array_equal(single.snapshot().table, fed.snapshot().table)
+
+
+def test_batched_client_equivalence():
+    """Batched vs unbatched clients converge to the same global stats."""
+    rng = np.random.default_rng(3)
+    F = 41
+    plain = FederatedPS(F, num_shards=4)
+    batched = FederatedPS(F, num_shards=4)
+    clients = {r: BatchedPSClient(batched, r, batch_frames=5) for r in range(4)}
+    for r, t, d in _random_deltas(rng, n_ranks=4, frames=23, F=F):
+        plain.update_and_fetch(r, t, d)
+        clients[r].update_and_fetch(r, t, d)
+    for c in clients.values():
+        c.flush()  # 23 % 5 != 0: there are pending deltas to drain
+    a, b = plain.snapshot().table, batched.snapshot().table
+    # Server-side merge order differs (coalesced vs per-frame), so exact
+    # equality is up to float associativity of the Pébay merge.
+    assert np.allclose(a, b, rtol=1e-9, atol=1e-12)
+    assert batched.n_updates == sum(c.n_flushes for c in clients.values())
+
+
+def test_batched_client_staleness_and_view():
+    F = 8
+    fed = FederatedPS(F, num_shards=2, aggregate_every=1)
+    client = BatchedPSClient(fed, rank=0, batch_frames=3)
+    d = StatsTable(F).update_batch(np.array([1, 1, 2]), np.array([10.0, 12.0, 5.0]))
+    snap1 = client.update_and_fetch(0, 0, d)
+    # nothing flushed yet: the server saw no pushes
+    assert fed.n_updates == 0
+    # the pending-inclusive view reflects the local delta immediately
+    assert client.view()[1, S.N] == 2
+    snap3 = None
+    for step in (1, 2):
+        snap3 = client.update_and_fetch(0, step, d)
+    assert fed.n_updates == 1  # third frame triggered the flush
+    assert snap3 is not None and snap3[1, S.N] == 6
+    assert snap1 is not None  # pre-flush fetch returned the pending delta
+
+
+def test_empty_merge_is_exact_copy():
+    """merge_moments with an empty operand must not perturb the other side."""
+    rng = np.random.default_rng(5)
+    row = S.batch_moments(rng.lognormal(3, 1, 100))
+    empty = S.empty_table(1)[0]
+    assert np.array_equal(S.merge_moments(empty, row), row)
+    assert np.array_equal(S.merge_moments(row, empty), row)
+
+
+def test_partition_assemble_roundtrip():
+    rng = np.random.default_rng(9)
+    F = 29
+    tab = StatsTable(F)
+    tab.update_batch(rng.integers(0, F, 500), rng.lognormal(3, 1, 500))
+    for nshards in (1, 2, 4, 7):
+        parts = S.partition_table(tab.table, nshards)
+        back = S.assemble_shards(parts, F)
+        assert np.array_equal(back, tab.table)
+
+
+def test_federated_concurrent_pushes():
+    """Many threads hammering the federation still yield exact global stats."""
+    import threading
+
+    rng = np.random.default_rng(13)
+    F, R, T = 31, 8, 25
+    deltas = {
+        r: [StatsTable(F).update_batch(rng.integers(0, F, 60), rng.lognormal(3, 1, 60))
+            for _ in range(T)]
+        for r in range(R)
+    }
+    fed = FederatedPS(F, num_shards=4, aggregate_every=3)
+    single = ParameterServer(F)
+
+    def worker(rank):
+        for t, d in enumerate(deltas[rank]):
+            fed.update_and_fetch(rank, t, d)
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(R)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    for r in range(R):
+        for t, d in enumerate(deltas[r]):
+            single.update_and_fetch(r, t, d)
+    a, b = fed.snapshot().table, single.snapshot().table
+    # Thread interleaving reorders per-row merges; Pébay merges are exactly
+    # order-independent in math but not in floats — counts/min/max stay
+    # exact, moments agree to tolerance.
+    assert np.array_equal(a[:, S.N], b[:, S.N])
+    assert np.array_equal(a[:, S.MIN], b[:, S.MIN])
+    assert np.array_equal(a[:, S.MAX], b[:, S.MAX])
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def _call_frame(rank, step, fids, runtimes):
+    from repro.core import events as E
+
+    rows, t = [], 0
+    for f_, r_ in zip(fids, runtimes):
+        rows.append((f_, E.ENTRY, t))
+        rows.append((f_, E.EXIT, t + r_))
+        t += r_ + 1
+    fe = E.make_func_events(rows, rank=rank)
+    fe = fe[np.argsort(fe["ts"], kind="stable")]
+    return E.Frame(0, rank, step, fe, E.empty_comm_events(0))
+
+
+def test_snapshot_never_smaller_than_pushed_delta():
+    """Growth + stale snapshots must not shrink the client's global view.
+
+    OnNodeAD copies the returned snapshot over its global stats and indexes
+    it by fid — a snapshot with fewer rows than the frame it just pushed
+    would crash labeling (regression: stale cached aggregate / stale
+    batched-client snapshot returned at pre-growth size).
+    """
+    from repro.core.ad import OnNodeAD
+
+    fed = FederatedPS(4, num_shards=2, aggregate_every=1000)  # agg stays stale
+    ad = OnNodeAD(4, rank=0, ps_client=fed, min_samples=1)
+    ad.process_frame(_call_frame(0, 0, [0, 1, 2], [10, 10, 10]))
+    ad.process_frame(_call_frame(0, 1, [7, 7], [10, 12]))  # grows table to 8
+    res = ad.process_frame(_call_frame(0, 2, [7, 3], [11, 10]))
+    assert res.records is not None
+
+    ps = ParameterServer(4)
+    client = BatchedPSClient(ps, 0, batch_frames=3)
+    ad2 = OnNodeAD(4, rank=0, ps_client=client, min_samples=1)
+    for s in range(3):  # third frame flushes; _last_global has 4 rows
+        ad2.process_frame(_call_frame(0, s, [0, 1], [10, 10]))
+    ad2.process_frame(_call_frame(0, 3, [7], [10]))  # pending grows to 8
+    res2 = ad2.process_frame(_call_frame(0, 4, [7, 5], [10, 10]))
+    assert res2.records is not None
+
+
+def test_anomaly_feed_on_federation():
+    fed = FederatedPS(8, num_shards=2)
+    seen = []
+    fed.subscribe(seen.append)
+    fed.report_anomalies(0, 0, 3)
+    fed.report_anomalies(0, 1, 1)
+    fed.report_anomalies(1, 0, 7)
+    assert len(seen) == 3
+    dash = fed.rank_dashboard()
+    assert dash[0]["total"] == 4.0 and dash[1]["maximum"] == 7.0
+    assert fed.frame_series(0) == [(0, 3), (1, 1)]
+
+
+def test_monitor_federated_matches_plain():
+    """End-to-end ChimbukoMonitor: federated PS == single PS on same stream."""
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.trace.monitor import ChimbukoMonitor
+
+    spec = nwchem_like(anomaly_rate=0.004, roots_per_frame=4)
+    g1 = WorkloadGenerator(spec, n_ranks=3, seed=7)
+    g2 = WorkloadGenerator(spec, n_ranks=3, seed=7)
+    m1 = ChimbukoMonitor(num_funcs=len(g1.registry), registry=g1.registry,
+                         min_samples=30)
+    m2 = ChimbukoMonitor(num_funcs=len(g2.registry), registry=g2.registry,
+                         min_samples=30, ps_shards=4)
+    for s in range(12):
+        for r in range(3):
+            m1.ingest(g1.frame(r, s)[0])
+            m2.ingest(g2.frame(r, s)[0])
+    assert np.array_equal(m1.ps.snapshot().table, m2.ps.snapshot().table)
+    assert m2.summary()["ps_shards"] == 4
+    m1.close()
+    m2.close()
+
+
+_FUNC_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import jax_ad as J
+from repro.core.stats import StatsTable
+mesh = jax.make_mesh((2, 4), ("ranks", "funcs"))
+F = J.padded_num_funcs(30, 4)
+step = J.make_distributed_ad_step(mesh, ("ranks",), min_count=10.0, func_axis="funcs")
+rng = np.random.default_rng(0)
+R, E = 2, 256
+fids = rng.integers(0, 30, (R, E)).astype(np.int32)
+durs = rng.lognormal(3, 0.4, (R, E)).astype(np.float32)
+new_table, labels = step(J.init_table(F), jnp.asarray(fids), jnp.asarray(durs))
+host = StatsTable(F)
+host.update_batch(fids.reshape(-1).astype(np.int64), durs.reshape(-1).astype(np.float64))
+np.testing.assert_allclose(np.asarray(new_table[:, 0]), host.counts(), rtol=1e-6)
+np.testing.assert_allclose(np.asarray(new_table[:, 1]), host.means(), rtol=1e-4)
+# label ownership: outlier on a row owned by the second funcs shard
+fids2 = np.full((R, 4), 9, np.int32)
+durs2 = np.full((R, 4), float(host.means()[9]), np.float32)
+durs2[1, 2] = 1e6
+_, labels2 = step(new_table, jnp.asarray(fids2), jnp.asarray(durs2))
+lab = np.asarray(labels2)
+assert lab[1, 2] == 1 and lab.sum() == 1, lab
+# pallas-accelerated per-shard segment reduction
+step_p = J.make_distributed_ad_step(
+    mesh, ("ranks",), min_count=10.0, func_axis="funcs", use_pallas=True)
+t2, _ = step_p(J.init_table(F), jnp.asarray(fids), jnp.asarray(durs))
+np.testing.assert_allclose(np.asarray(t2[:, 0]), host.counts(), rtol=1e-6)
+print("FUNC_SHARDED_AD_OK")
+"""
+
+
+def test_func_sharded_ad_multidevice():
+    """funcs-axis shard_map federation == exact host stats + full labels."""
+    r = subprocess.run(
+        [sys.executable, "-c", _FUNC_SHARDED_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=300,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    assert "FUNC_SHARDED_AD_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_kernel_fid_offset():
+    """Pallas moments kernel rebases fids into a contiguous shard block."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as K
+
+    rng = np.random.default_rng(2)
+    fids = rng.integers(0, 32, 500).astype(np.int32)
+    durs = rng.lognormal(3, 0.5, 500).astype(np.float32)
+    host = StatsTable(32)
+    host.update_batch(fids.astype(np.int64), durs.astype(np.float64))
+    for base in (0, 8, 24):
+        d = K.moments_table(jnp.asarray(fids), jnp.asarray(durs), 8, fid_offset=base)
+        np.testing.assert_allclose(
+            np.asarray(d[:, 0]), host.counts()[base : base + 8], rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(d[:, 1]), host.means()[base : base + 8], rtol=1e-4, atol=1e-3
+        )

@@ -1,0 +1,78 @@
+"""Property tests: Pébay merges are partition-invariant over PS shards."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats as S
+from repro.core.ps import FederatedPS, ParameterServer
+from repro.core.stats import StatsTable
+
+values = st.lists(
+    st.floats(min_value=1e-3, max_value=1e6, allow_nan=False, width=64),
+    min_size=0,
+    max_size=120,
+)
+
+
+@given(
+    data=st.lists(st.tuples(st.integers(0, 30), values), min_size=1, max_size=8),
+    num_shards=st.integers(1, 6),
+)
+@settings(max_examples=40, deadline=None)
+def test_merge_partition_invariant(data, num_shards):
+    """Sharding the fid space arbitrarily never changes the merged moments."""
+    F = 31
+    single = StatsTable(F)
+    fed = FederatedPS(F, num_shards=num_shards)
+    for i, (fid, xs) in enumerate(data):
+        delta = StatsTable(F).update_batch(
+            np.full(len(xs), fid, np.int64), np.asarray(xs, np.float64)
+        )
+        single.merge_array(delta)
+        fed.update_and_fetch(0, i, delta)
+    assert np.array_equal(single.table, fed.snapshot().table)
+
+
+@given(
+    xs=st.lists(
+        st.floats(min_value=1e-3, max_value=1e5, allow_nan=False, width=64),
+        min_size=1,
+        max_size=200,
+    ),
+    cuts=st.lists(st.integers(0, 199), max_size=4),
+)
+@settings(max_examples=40, deadline=None)
+def test_row_merge_split_invariant(xs, cuts):
+    """merge_moments over any split of a value stream ~= one-shot moments."""
+    x = np.asarray(xs, np.float64)
+    bounds = sorted({min(c, len(xs)) for c in cuts} | {0, len(xs)})
+    row = S.empty_table(1)[0]
+    for lo, hi in zip(bounds, bounds[1:]):
+        row = S.merge_moments(row, S.batch_moments(x[lo:hi]))
+    ref = S.batch_moments(x)
+    assert np.isclose(row[S.N], ref[S.N])
+    if ref[S.N] > 0:
+        scale = max(abs(ref[S.MEAN]), 1.0)
+        assert np.isclose(row[S.MEAN], ref[S.MEAN], rtol=1e-9, atol=1e-6 * scale)
+        assert np.isclose(row[S.M2], ref[S.M2], rtol=1e-6, atol=1e-3 * scale**2)
+        assert row[S.MIN] == ref[S.MIN] and row[S.MAX] == ref[S.MAX]
+
+
+@given(num_shards=st.integers(1, 8), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_random_stream_bitmatch(num_shards, seed):
+    """Random event streams: federated == single-instance, bit for bit."""
+    rng = np.random.default_rng(seed)
+    F = int(rng.integers(4, 50))
+    single = ParameterServer(F)
+    fed = FederatedPS(F, num_shards=num_shards)
+    for t in range(int(rng.integers(1, 12))):
+        n = int(rng.integers(0, 60))
+        delta = StatsTable(F).update_batch(
+            rng.integers(0, F, n), rng.lognormal(3, 1, n)
+        )
+        single.update_and_fetch(0, t, delta)
+        fed.update_and_fetch(0, t, delta)
+    assert np.array_equal(single.snapshot().table, fed.snapshot().table)

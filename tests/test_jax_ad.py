@@ -1,4 +1,5 @@
 """On-device AD: jnp tables vs host oracle; distributed psum merge."""
+import os
 import subprocess
 import sys
 
@@ -99,6 +100,6 @@ def test_distributed_ad_multidevice():
         capture_output=True,
         text=True,
         timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "DISTRIBUTED_AD_OK" in r.stdout, r.stdout + r.stderr

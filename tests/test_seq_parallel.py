@@ -14,8 +14,8 @@ from repro.models import model as M
 from repro.models.common import init_params
 from repro.models.model import ShardCtx
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 
 for arch in ("gemma2-2b", "falcon-mamba-7b", "jamba-v0.1-52b", "minicpm3-4b"):
     cfg = dataclasses.replace(
@@ -42,6 +42,6 @@ print("SEQ_PARALLEL_OK")
 def test_seq_parallel_matches_reference():
     r = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        timeout=580, env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        timeout=580, env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "SEQ_PARALLEL_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-4000:]

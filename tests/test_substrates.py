@@ -190,6 +190,6 @@ print("RESHARD_OK")
 """ % (str(tmp_path / "ck2"), str(tmp_path / "ck2"))
     r = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True, timeout=240,
-        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "RESHARD_OK" in r.stdout, r.stdout + r.stderr

@@ -117,7 +117,7 @@ print("DP_COMPRESS_OK", l0[-1], l1[-1])
 def test_dp_compressed_training_converges():
     r = subprocess.run(
         [sys.executable, "-c", _DP_SCRIPT], capture_output=True, text=True,
-        timeout=560, env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        timeout=560, env={**os.environ, "PYTHONPATH": "src"},
     )
     assert "DP_COMPRESS_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
 
