@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   table1_overhead   tracing/Chimbuko execution-time overhead (Fig. 8/Table I)
   fig9_reduction    trace-size reduction factors (Fig. 9)
   ps_sharding       PS federation update throughput vs shard count (§III-B2)
+  provdb_sharding   provenance DB ingest/query throughput vs shard count (§V)
   kernels           Pallas-vs-XLA micro-benchmarks
   roofline          per-cell roofline terms from the dry-run artifacts
 """
@@ -19,6 +20,7 @@ def main() -> None:
         bench_ad_scaling,
         bench_kernels,
         bench_overhead,
+        bench_provdb_sharding,
         bench_ps_sharding,
         bench_reduction,
         bench_roofline,
@@ -27,7 +29,8 @@ def main() -> None:
     failures = 0
     print("name,us_per_call,derived")
     for mod in (bench_ad_scaling, bench_overhead, bench_reduction,
-                bench_ps_sharding, bench_kernels, bench_roofline):
+                bench_ps_sharding, bench_provdb_sharding, bench_kernels,
+                bench_roofline):
         try:
             mod.main()
         except Exception:

@@ -6,23 +6,41 @@ its rank/thread/entry/exit/runtime/children/messages, its ancestor call stack,
 its communication events, the k surrounding same-function calls, plus static
 run provenance (environment, configuration, mesh).  Output is JSONL (one
 record per anomaly) with an in-memory index for the viz queries.
+
+Two store topologies, mirroring the PS federation (§III-B2, core/ps.py):
+
+  * :class:`ProvenanceDB` — the single-writer store (one JSONL file, one
+    index): the degenerate 1-shard case.
+  * :class:`FederatedProvenanceDB` — N :class:`ProvenanceShard` partitions
+    over (rank, fid) space with the same cyclic slicing the PS uses for fid
+    space (``(rank + fid) % S``, the provenance analogue of ``delta[s::S]``).
+    Each shard owns its own JSONL file and index, so >100-rank provenance
+    capture stops funneling through one writer; a federated ``query()`` fans
+    out to the owning shards and merges the hits back in capture-timestamp
+    (global ingest sequence) order — identical docs, identical order to the
+    single store fed the same stream.
+
+Both stores index docs by (rank, fid, step) with a sorted entry-time index,
+so point and window queries are posting-list lookups instead of linear scans,
+and both support ``append=True`` resume: reopening an existing JSONL keeps
+the prior run's records (loaded back into the index) instead of truncating.
 """
 from __future__ import annotations
 
-import dataclasses
+import glob
+import heapq
 import io
 import json
 import os
 import platform
 import sys
 import time
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from .ad import ADFrameResult
 from .events import FunctionRegistry
-from .reduction import select_kept_records
 
 
 def static_provenance(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -61,81 +79,172 @@ def _record_to_dict(rec: np.ndarray, registry: Optional[FunctionRegistry]) -> Di
     return d
 
 
-class ProvenanceDB:
-    """JSONL-backed anomaly provenance store with in-memory query index."""
+def shard_of(rank: int, fid: int, num_shards: int) -> int:
+    """Cyclic (rank, fid) → shard map: the provenance analogue of the PS's
+    fid-space slicing (``stats.partition_table``'s ``fid % S``).  Stable under
+    registry growth and new ranks — a new (rank, fid) pair maps to a shard
+    without repartitioning any existing doc."""
+    return (int(rank) + int(fid)) % int(num_shards)
+
+
+def build_anomaly_doc(
+    result: ADFrameResult,
+    idx: int,
+    registry: Optional[FunctionRegistry],
+    k_neighbors: int,
+    comm_events: Optional[np.ndarray] = None,
+) -> Dict[str, Any]:
+    """Assemble the provenance document for one anomaly of an analyzed frame.
+
+    Comm events are attached by *attribution*: event j belongs to the anomaly
+    iff the call-stack builder mapped it to this record's entry
+    (``ctx.comm_entry_row[j] == ctx.rec_entry_row[idx]`` on the same tid) —
+    not merely because it falls inside the anomaly's [entry, exit] window,
+    which would also capture events owned by child/sibling calls.  The
+    window test survives only as a fallback for frames with no attribution.
+    """
+    recs = result.records
+    anomaly = _record_to_dict(recs[idx], registry)
+    # ancestor call stack at detection time (paper Fig. 6 view)
+    stack = [
+        {
+            "fid": fid,
+            "func": registry.name_of(fid) if registry else str(fid),
+            "entry": ts,
+            "depth": depth,
+        }
+        for (fid, ts, depth) in result.ctx.ancestors(idx)
+    ]
+    # k same-function neighbors (paper: k normal calls before/after)
+    same = np.nonzero(recs["fid"] == recs["fid"][idx])[0]
+    w = int(np.nonzero(same == idx)[0][0])
+    neigh = same[max(0, w - k_neighbors) : w + k_neighbors + 1]
+    neighbors = [_record_to_dict(recs[j], registry) for j in neigh if j != idx]
+    comms: List[Dict[str, Any]] = []
+    if comm_events is not None and len(comm_events):
+        rows = result.ctx.comm_entry_row
+        if rows is not None and len(rows) == len(comm_events) and np.any(rows >= 0):
+            tid = int(result.ctx.tid_of_record[idx])
+            erow = int(result.ctx.rec_entry_row[idx])
+            for j in np.nonzero(rows >= 0)[0]:
+                ev = comm_events[j]
+                if int(ev["tid"]) == tid and int(rows[j]) == erow:
+                    comms.append({k2: int(ev[k2]) for k2 in ev.dtype.names})
+        else:
+            # Fallback (no attribution available): same-rank window overlap.
+            for ev in comm_events:
+                if (
+                    int(ev["ts"]) >= int(recs["entry"][idx])
+                    and int(ev["ts"]) <= int(recs["exit"][idx])
+                    and int(ev["rank"]) == int(recs["rank"][idx])
+                ):
+                    comms.append({k2: int(ev[k2]) for k2 in ev.dtype.names})
+    return {
+        "type": "anomaly",
+        "step": result.step,
+        "rank": result.rank,
+        "anomaly": anomaly,
+        "call_stack": stack,
+        "neighbors": neighbors,
+        "comm": comms,
+    }
+
+
+def _read_docs(path: str) -> List[Dict[str, Any]]:
+    """Parse anomaly docs (run_info headers skipped) out of a JSONL file."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            doc = json.loads(line)
+            if doc.get("type") == "run_info":
+                continue
+            out.append(doc)
+    return out
+
+
+def _resume_order(docs: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Original ingest order of resumed docs: by the persisted ``seq``
+    (legacy docs without one sort after, keeping their file order)."""
+    ordered = sorted(enumerate(docs), key=lambda kd: (kd[1].get("seq", float("inf")), kd[0]))
+    return [doc for _, doc in ordered]
+
+
+class ProvenanceShard:
+    """One provenance partition: a JSONL file plus an in-memory query index.
+
+    Docs are indexed by (rank, fid, step) posting lists and by a lazily
+    sorted anomaly-entry-time index, so :meth:`query` touches only matching
+    candidates instead of scanning every doc.  Each doc carries the global
+    ingest sequence number its owner assigned (persisted as ``seq`` in the
+    JSONL), which is what federated query merging orders by and what resume
+    uses to reconstruct cross-shard ingest order.
+    """
 
     def __init__(
         self,
         path: Optional[str] = None,
-        registry: Optional[FunctionRegistry] = None,
-        k_neighbors: int = 5,
-        run_info: Optional[Dict[str, Any]] = None,
+        append: bool = False,
+        header: Optional[Dict[str, Any]] = None,
     ):
         self.path = path
-        self.registry = registry
-        self.k = k_neighbors
-        self.records: List[Dict[str, Any]] = []
+        self.docs: List[Dict[str, Any]] = []
+        self.seqs: List[int] = []
+        self._by_key: Dict[Tuple[int, int, int], List[int]] = {}
+        self._by_rank: Dict[int, List[int]] = {}
+        self._by_fid: Dict[int, List[int]] = {}
+        self._by_step: Dict[int, List[int]] = {}
+        self._entry: List[int] = []
+        self._exit: List[int] = []
+        self._order: Optional[np.ndarray] = None  # argsort by entry ts
+        self._order_vals: Optional[np.ndarray] = None
         self._fh: Optional[io.TextIOBase] = None
+        self._resumed: List[Dict[str, Any]] = []
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            self._fh = open(path, "w")
-            header = {"type": "run_info", **static_provenance(run_info)}
-            self._fh.write(json.dumps(header) + "\n")
+            resuming = append and os.path.exists(path) and os.path.getsize(path) > 0
+            if resuming:
+                self._resumed = _read_docs(path)
+                self._fh = open(path, "a")
+            else:
+                self._fh = open(path, "w")
+                if header is not None:
+                    self._fh.write(json.dumps(header) + "\n")
 
-    def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
-        """Store provenance for every anomaly in an analyzed frame."""
-        recs = result.records
-        n = 0
-        for idx in result.anomaly_idx:
-            idx = int(idx)
-            anomaly = _record_to_dict(recs[idx], self.registry)
-            # ancestor call stack at detection time (paper Fig. 6 view)
-            stack = [
-                {
-                    "fid": fid,
-                    "func": self.registry.name_of(fid) if self.registry else str(fid),
-                    "entry": ts,
-                    "depth": depth,
-                }
-                for (fid, ts, depth) in result.ctx.ancestors(idx)
-            ]
-            # k same-function neighbors (paper: k normal calls before/after)
-            same = np.nonzero(recs["fid"] == recs["fid"][idx])[0]
-            w = int(np.nonzero(same == idx)[0][0])
-            neigh = same[max(0, w - self.k) : w + self.k + 1]
-            neighbors = [
-                _record_to_dict(recs[j], self.registry) for j in neigh if j != idx
-            ]
-            comms: List[Dict[str, Any]] = []
-            if comm_events is not None and len(comm_events):
-                rows = result.ctx.comm_entry_row
-                sel = np.nonzero(rows >= 0)[0]
-                for j in sel:
-                    ev = comm_events[j]
-                    if (
-                        int(ev["ts"]) >= int(recs["entry"][idx])
-                        and int(ev["ts"]) <= int(recs["exit"][idx])
-                        and int(ev["rank"]) == int(recs["rank"][idx])
-                    ):
-                        comms.append({k2: int(ev[k2]) for k2 in ev.dtype.names})
-            doc = {
-                "type": "anomaly",
-                "step": result.step,
-                "rank": result.rank,
-                "anomaly": anomaly,
-                "call_stack": stack,
-                "neighbors": neighbors,
-                "comm": comms,
-            }
-            self.records.append(doc)
-            if self._fh:
-                self._fh.write(json.dumps(doc) + "\n")
-            n += 1
-        if self._fh:
-            self._fh.flush()
-        return n
+    def take_resumed(self) -> List[Dict[str, Any]]:
+        """Docs parsed from a pre-existing file on append — the owner re-adds
+        them (without re-writing) so resumed runs keep their query index."""
+        out, self._resumed = self._resumed, []
+        return out
 
-    # ----------------------------------------------------------- queries
+    # ------------------------------------------------------------- mutation
+    def add(self, doc: Dict[str, Any], seq: int, write: bool = True) -> None:
+        doc["seq"] = seq  # persisted so resume can rebuild cross-shard order
+        pos = len(self.docs)
+        self.docs.append(doc)
+        self.seqs.append(seq)
+        a = doc["anomaly"]
+        rank, fid, step = int(doc["rank"]), int(a["fid"]), int(doc["step"])
+        self._by_key.setdefault((rank, fid, step), []).append(pos)
+        self._by_rank.setdefault(rank, []).append(pos)
+        self._by_fid.setdefault(fid, []).append(pos)
+        self._by_step.setdefault(step, []).append(pos)
+        self._entry.append(int(a["entry"]))
+        self._exit.append(int(a["exit"]))
+        self._order = None
+        if write and self._fh:
+            self._fh.write(json.dumps(doc) + "\n")
+
+    # -------------------------------------------------------------- queries
+    def _time_index(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._order is None:
+            ent = np.asarray(self._entry, np.int64)
+            self._order = np.argsort(ent, kind="stable")
+            self._order_vals = ent[self._order]
+        return self._order, self._order_vals
+
     def query(
         self,
         rank: Optional[int] = None,
@@ -143,9 +252,32 @@ class ProvenanceDB:
         step: Optional[int] = None,
         t0: Optional[int] = None,
         t1: Optional[int] = None,
-    ) -> List[Dict[str, Any]]:
-        out = []
-        for doc in self.records:
+    ) -> List[Tuple[int, Dict[str, Any]]]:
+        """Matching (seq, doc) pairs in global ingest-sequence order."""
+        cands: Iterable[int]
+        if rank is not None and fid is not None and step is not None:
+            cands = self._by_key.get((int(rank), int(fid), int(step)), [])
+        elif rank is not None or fid is not None or step is not None:
+            lists = [
+                index.get(int(val), [])
+                for val, index in (
+                    (rank, self._by_rank),
+                    (fid, self._by_fid),
+                    (step, self._by_step),
+                )
+                if val is not None
+            ]
+            cands = min(lists, key=len)
+        elif t0 is not None or t1 is not None:
+            order, vals = self._time_index()
+            hi = len(order) if t1 is None else int(np.searchsorted(vals, int(t1), side="right"))
+            cands = order[:hi]
+        else:
+            cands = range(len(self.docs))
+        out: List[Tuple[int, Dict[str, Any]]] = []
+        for pos in cands:
+            pos = int(pos)
+            doc = self.docs[pos]
             a = doc["anomaly"]
             if rank is not None and doc["rank"] != rank:
                 continue
@@ -157,8 +289,14 @@ class ProvenanceDB:
                 continue
             if t1 is not None and a["entry"] > t1:
                 continue
-            out.append(doc)
+            out.append((self.seqs[pos], doc))
+        out.sort(key=lambda sd: sd[0])
         return out
+
+    # ------------------------------------------------------------ lifecycle
+    def flush(self) -> None:
+        if self._fh:
+            self._fh.flush()
 
     def close(self) -> None:
         if self._fh:
@@ -166,4 +304,211 @@ class ProvenanceDB:
             self._fh = None
 
     def __len__(self) -> int:
-        return len(self.records)
+        return len(self.docs)
+
+
+class ProvenanceDB:
+    """JSONL-backed anomaly provenance store with an indexed query path.
+
+    The single-writer store (and the federation's 1-shard degenerate case).
+    ``append=True`` resumes an existing JSONL instead of truncating it: the
+    run_info header is written only when starting a fresh file, and prior
+    records are loaded back into the in-memory index — the elastic/restart
+    path keeps its pre-failure anomaly provenance.
+    """
+
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        registry: Optional[FunctionRegistry] = None,
+        k_neighbors: int = 5,
+        run_info: Optional[Dict[str, Any]] = None,
+        append: bool = False,
+    ):
+        self.path = path
+        self.registry = registry
+        self.k = k_neighbors
+        self._seq = 0
+        header = {"type": "run_info", **static_provenance(run_info)} if path else None
+        self._shard = ProvenanceShard(path=path, append=append, header=header)
+        for doc in _resume_order(self._shard.take_resumed()):
+            seq = doc.get("seq", self._seq)
+            self._shard.add(doc, seq, write=False)
+            self._seq = max(self._seq, seq + 1)
+
+    @property
+    def records(self) -> List[Dict[str, Any]]:
+        return self._shard.docs
+
+    def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
+        """Store provenance for every anomaly in an analyzed frame."""
+        n = 0
+        for idx in result.anomaly_idx:
+            doc = build_anomaly_doc(result, int(idx), self.registry, self.k, comm_events)
+            self._shard.add(doc, self._seq)
+            self._seq += 1
+            n += 1
+        self._shard.flush()
+        return n
+
+    # ----------------------------------------------------------- queries
+    def query(
+        self,
+        rank: Optional[int] = None,
+        fid: Optional[int] = None,
+        step: Optional[int] = None,
+        t0: Optional[int] = None,
+        t1: Optional[int] = None,
+    ) -> List[Dict[str, Any]]:
+        return [doc for _, doc in self._shard.query(rank, fid, step, t0, t1)]
+
+    def close(self) -> None:
+        self._shard.close()
+
+    def __len__(self) -> int:
+        return len(self._shard)
+
+
+def shard_paths(path: Optional[str], num_shards: int) -> List[Optional[str]]:
+    """Per-shard JSONL paths.  One shard keeps the caller's path verbatim
+    (drop-in for :class:`ProvenanceDB`); N shards interpose ``.shard<s>``
+    before the extension: ``prov.jsonl`` → ``prov.shard0.jsonl``, ..."""
+    if path is None:
+        return [None] * num_shards
+    if num_shards == 1:
+        return [path]
+    root, ext = os.path.splitext(path)
+    return [f"{root}.shard{s}{ext}" for s in range(num_shards)]
+
+
+class FederatedProvenanceDB:
+    """Front-end over N (rank, fid)-sharded provenance stores — same API.
+
+    ``ingest`` routes each anomaly doc to the shard owning its
+    ``shard_of(rank, fid, S)`` slice; each shard appends to its own JSONL
+    and maintains its own index, so at >100 ranks no single writer or
+    index serializes provenance capture.  ``query`` fans out to the shards
+    that can own matching docs and heap-merges the per-shard hits by
+    global ingest sequence — the capture-timestamp order a single
+    :class:`ProvenanceDB` would have returned, so ``num_shards=1`` is the
+    bit-identical degenerate case and any shard count yields the same
+    docs in the same order.
+    """
+
+    def __init__(
+        self,
+        num_shards: int = 4,
+        path: Optional[str] = None,
+        registry: Optional[FunctionRegistry] = None,
+        k_neighbors: int = 5,
+        run_info: Optional[Dict[str, Any]] = None,
+        append: bool = False,
+    ):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
+        self.path = path
+        self.registry = registry
+        self.k = k_neighbors
+        self._seq = 0
+        header = {"type": "run_info", **static_provenance(run_info)} if path else None
+        owned = shard_paths(path, num_shards)
+        self.shards = [
+            ProvenanceShard(path=p, append=append, header=header) for p in owned
+        ]
+        if append:
+            # Resume is topology-agnostic: prior docs are gathered from the
+            # whole path family (the owned shard files plus any base-path /
+            # shardN files a run with a different shard count left behind),
+            # re-ordered by their persisted global seq, and re-routed by the
+            # *current* cyclic map so queries find them wherever they now
+            # belong.  write=False keeps the old files as the docs' only
+            # on-disk home — nothing is duplicated or truncated, so a later
+            # resume (at any shard count) still sees them.
+            resumed: List[Dict[str, Any]] = []
+            for shard in self.shards:
+                resumed.extend(shard.take_resumed())
+            for p in self._extra_resume_paths(owned):
+                resumed.extend(_read_docs(p))
+            for doc in _resume_order(resumed):
+                seq = doc.get("seq", self._seq)
+                s = shard_of(doc["rank"], doc["anomaly"]["fid"], num_shards)
+                self.shards[s].add(doc, seq, write=False)
+                self._seq = max(self._seq, seq + 1)
+
+    def _extra_resume_paths(self, owned: List[Optional[str]]) -> List[str]:
+        """Non-empty provenance files of this path family not owned by the
+        current topology (base file and/or stale ``.shard<k>`` files)."""
+        if not self.path:
+            return []
+        root, ext = os.path.splitext(self.path)
+        family = [self.path] + sorted(
+            glob.glob(glob.escape(root) + ".shard*" + glob.escape(ext))
+        )
+        owned_set = {p for p in owned if p}
+        return [
+            p
+            for p in family
+            if p not in owned_set and os.path.exists(p) and os.path.getsize(p) > 0
+        ]
+
+    # ------------------------------------------------------------- mutation
+    def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
+        """Route every anomaly doc of a frame to its owning shard."""
+        touched = set()
+        n = 0
+        for idx in result.anomaly_idx:
+            idx = int(idx)
+            doc = build_anomaly_doc(result, idx, self.registry, self.k, comm_events)
+            s = shard_of(doc["rank"], doc["anomaly"]["fid"], self.num_shards)
+            self.shards[s].add(doc, self._seq)
+            self._seq += 1
+            touched.add(s)
+            n += 1
+        for s in touched:
+            self.shards[s].flush()
+        return n
+
+    # -------------------------------------------------------------- queries
+    def _owning_shards(self, rank: Optional[int], fid: Optional[int]) -> List[ProvenanceShard]:
+        """Shards that can hold matching docs: one when (rank, fid) is fully
+        specified, all otherwise (cyclic slicing spreads either key alone)."""
+        if rank is not None and fid is not None:
+            return [self.shards[shard_of(rank, fid, self.num_shards)]]
+        return self.shards
+
+    def query(
+        self,
+        rank: Optional[int] = None,
+        fid: Optional[int] = None,
+        step: Optional[int] = None,
+        t0: Optional[int] = None,
+        t1: Optional[int] = None,
+    ) -> List[Dict[str, Any]]:
+        per_shard = [
+            shard.query(rank, fid, step, t0, t1)
+            for shard in self._owning_shards(rank, fid)
+        ]
+        return [doc for _, doc in heapq.merge(*per_shard, key=lambda sd: sd[0])]
+
+    @property
+    def records(self) -> List[Dict[str, Any]]:
+        """All docs in global ingest order (the single-store ``records`` view)."""
+        per_shard = [list(zip(shard.seqs, shard.docs)) for shard in self.shards]
+        return [doc for _, doc in heapq.merge(*per_shard, key=lambda sd: sd[0])]
+
+    # ------------------------------------------------------------ lifecycle
+    def shard_doc_counts(self) -> List[int]:
+        """Per-shard doc counts — the load-balance view of the federation."""
+        return [len(shard) for shard in self.shards]
+
+    def flush(self) -> None:
+        for shard in self.shards:
+            shard.flush()
+
+    def close(self) -> None:
+        for shard in self.shards:
+            shard.close()
+
+    def __len__(self) -> int:
+        return sum(len(shard) for shard in self.shards)

@@ -46,22 +46,12 @@ def train(
     inject_straggler_at: Optional[int] = None,
     opts: StepOptions = StepOptions(ce_chunk=512, opt=OptConfig(warmup_steps=10, peak_lr=1e-3)),
     log_every: int = 10,
+    provdb_shards: int = 1,
 ) -> Dict:
     cfg = configs.smoke(arch) if smoke else configs.get_config(arch)
     ctx = make_shard_ctx(cfg, None, global_batch, opts)
     step_fn = jax.jit(build_train_step(cfg, ctx, opts), donate_argnums=(0,))
     stream = SyntheticStream(cfg, DataShard(0, 1, global_batch), seq, seed=seed)
-
-    monitor = ChimbukoMonitor(
-        num_funcs=32,
-        prov_path=os.path.join(monitor_dir, "provenance.jsonl") if monitor_dir else None,
-        min_samples=8, alpha=6.0, straggler_alpha=3.0, straggler_min_steps=8,
-        run_info={"arch": cfg.name, "steps": steps, "global_batch": global_batch},
-    )
-    monitor.on_straggler(
-        lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
-    )
-    tracer = Tracer(monitor.registry, rank=0)
 
     start_step = 0
     mgr = CK.CheckpointManager(ckpt_dir, interval=ckpt_interval) if ckpt_dir else None
@@ -71,6 +61,22 @@ def train(
         if restored is not None:
             start_step, state = restored
             print(f"[train] resumed from checkpoint at step {start_step}")
+
+    # On a checkpoint resume the provenance store appends instead of
+    # truncating, so the elastic/auto-restart path keeps every pre-failure
+    # anomaly record.
+    monitor = ChimbukoMonitor(
+        num_funcs=32,
+        prov_path=os.path.join(monitor_dir, "provenance.jsonl") if monitor_dir else None,
+        min_samples=8, alpha=6.0, straggler_alpha=3.0, straggler_min_steps=8,
+        run_info={"arch": cfg.name, "steps": steps, "global_batch": global_batch},
+        provdb_shards=provdb_shards,
+        prov_append=start_step > 0,
+    )
+    monitor.on_straggler(
+        lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
+    )
+    tracer = Tracer(monitor.registry, rank=0)
 
     history = []
     for step in range(start_step, steps):
@@ -128,6 +134,7 @@ def main():
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--auto-restart", action="store_true")
     ap.add_argument("--inject-straggler-at", type=int, default=None)
+    ap.add_argument("--provdb-shards", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -136,6 +143,7 @@ def main():
         global_batch=args.global_batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
         monitor_dir=args.monitor_dir, ckpt_interval=args.ckpt_interval,
         seed=args.seed, inject_straggler_at=args.inject_straggler_at,
+        provdb_shards=args.provdb_shards,
     )
     if args.auto_restart:
         attempts = 0

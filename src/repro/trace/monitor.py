@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.ad import ADFrameResult, OnNodeAD
 from repro.core.events import Frame, FunctionRegistry
-from repro.core.provenance import ProvenanceDB
+from repro.core.provenance import FederatedProvenanceDB, ProvenanceDB
 from repro.core.ps import BatchedPSClient, FederatedPS, ParameterServer
 from repro.core.reduction import Reducer, merge_stats
 from repro.core.stats import RunningStats
@@ -48,6 +48,8 @@ class ChimbukoMonitor:
         ps_shards: int = 1,
         ps_batch_frames: int = 1,
         ps_aggregate_every: int = 16,
+        provdb_shards: int = 1,
+        prov_append: bool = False,
     ):
         self.registry = registry or FunctionRegistry()
         # PS federation (paper §III-B2): with ps_shards > 1 the stats table
@@ -67,10 +69,20 @@ class ChimbukoMonitor:
         self._algorithm = algorithm
         self.ads: Dict[int, OnNodeAD] = {}
         self.reducers: Dict[int, Reducer] = {}
-        self.provdb = ProvenanceDB(
-            path=prov_path, registry=self.registry, k_neighbors=k_neighbors,
-            run_info=run_info,
-        )
+        # Provenance federation (paper §V at scale): with provdb_shards > 1
+        # anomaly docs are partitioned over (rank, fid) space across shard
+        # JSONL files + indexes, mirroring the PS federation; prov_append
+        # resumes a prior run's store instead of truncating it.
+        if provdb_shards > 1:
+            self.provdb = FederatedProvenanceDB(
+                num_shards=provdb_shards, path=prov_path, registry=self.registry,
+                k_neighbors=k_neighbors, run_info=run_info, append=prov_append,
+            )
+        else:
+            self.provdb = ProvenanceDB(
+                path=prov_path, registry=self.registry, k_neighbors=k_neighbors,
+                run_info=run_info, append=prov_append,
+            )
         # reduced record store: what the on-node modules write for the viz
         self.kept: Dict[Tuple[int, int], np.ndarray] = {}
         # straggler detection state
@@ -149,6 +161,9 @@ class ChimbukoMonitor:
         if isinstance(self.ps, FederatedPS):
             out["ps_shards"] = self.ps.num_shards
             out["ps_shard_pushes"] = self.ps.n_shard_pushes
+        if isinstance(self.provdb, FederatedProvenanceDB):
+            out["provdb_shards"] = self.provdb.num_shards
+            out["provdb_shard_docs"] = self.provdb.shard_doc_counts()
         return out
 
     def flush_ps(self) -> None:

@@ -10,8 +10,10 @@ below).  A JSON dump stands in for the websocket broadcast.
   function_view     Fig. 5: executed functions of one (rank, frame) with
                     selectable axes (entry/exit/runtime/fid/label/children/messages)
   call_stack_view   Fig. 6: call stack around an anomaly with comm arrows
+  provenance_view   §V: raw provenance docs for a (rank, fid, step, window)
+                    query, served through the (possibly sharded) provenance DB
 
-JSON schemas for all four endpoints (and which paper figure each
+JSON schemas for all endpoints (and which paper figure each
 reproduces) are documented in docs/viz.md.  The endpoints are agnostic to
 the PS topology: a sharded ``FederatedPS`` serves them through the same
 ``AnomalyFeed`` interface as the single-instance server, and its stats
@@ -41,10 +43,17 @@ class VizServer:
         key = {"average": "average", "stddev": "stddev", "maximum": "maximum",
                "minimum": "minimum", "total": "total"}[stat]
         ranked = sorted(dash.items(), key=lambda kv: kv[1][key], reverse=True)
+        # top and bottom must not double-report a rank when there are fewer
+        # than top + bottom ranks: bottom draws from the remainder only, and
+        # is returned least-problematic first (ascending stat).
+        rest = ranked[top:]
         return {
             "stat": stat,
             "top": [{"rank": r, **v} for r, v in ranked[:top]],
-            "bottom": [{"rank": r, **v} for r, v in ranked[-bottom:]],
+            "bottom": [
+                {"rank": r, **v}
+                for r, v in rest[max(len(rest) - bottom, 0):][::-1]
+            ],
         }
 
     # ---------------------------------------------------------------- Fig 4
@@ -107,6 +116,33 @@ class VizServer:
                      "kind": "send" if c["ctype"] == 0 else "recv"}
                 )
         return {"rank": rank, "t0": t0, "t1": t1, "bars": bars, "comm": arrows}
+
+    # ---------------------------------------------------------- provenance
+    def provenance_view(
+        self,
+        rank: Optional[int] = None,
+        fid: Optional[int] = None,
+        step: Optional[int] = None,
+        t0: Optional[int] = None,
+        t1: Optional[int] = None,
+        limit: int = 100,
+    ) -> Dict[str, Any]:
+        """Raw provenance query endpoint (paper §V) over the provenance DB.
+
+        Transparent to the store topology: a ``FederatedProvenanceDB`` fans
+        the query out to the owning shards and merge-returns docs in the
+        same global ingest order a single store would.
+        """
+        docs = self.monitor.provdb.query(rank=rank, fid=fid, step=step, t0=t0, t1=t1)
+        return {
+            "query": {"rank": rank, "fid": fid, "step": step, "t0": t0, "t1": t1},
+            "n_total": len(docs),
+            "docs": docs[:limit],
+            "topology": {
+                "shards": getattr(self.monitor.provdb, "num_shards", 1),
+                "n_records": len(self.monitor.provdb),
+            },
+        }
 
     # ------------------------------------------------------------- export
     def dump(self, path: str, ranks: Optional[List[int]] = None) -> None:

@@ -1,0 +1,283 @@
+"""Provenance federation: comm attribution, append/resume, sharded queries."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.ad import ADFrameResult, OnNodeAD
+from repro.core.callstack import CallStackBuilder
+from repro.core.events import (
+    ENTRY,
+    EXIT,
+    Frame,
+    empty_comm_events,
+    make_func_events,
+)
+from repro.core.provenance import (
+    FederatedProvenanceDB,
+    ProvenanceDB,
+    shard_of,
+    shard_paths,
+)
+from repro.core.sim import WorkloadGenerator, nwchem_like
+from repro.trace.monitor import ChimbukoMonitor
+from repro.viz.server import VizServer
+
+# Fixed run_info so two stores fed the same stream write identical headers
+# (static_provenance lets extras override the wall-clock timestamp).
+FIXED_RUN_INFO = {"timestamp": 0.0}
+
+
+def _comm_frame():
+    """rank 0: tid0 main(0..100){child(10..40)}, tid1 other(0..100);
+    comm events at ts 20 (child), 50 (main), 60 (tid1's call)."""
+    f0 = make_func_events(
+        [(0, ENTRY, 0), (1, ENTRY, 10), (1, EXIT, 40), (0, EXIT, 100)], tid=0
+    )
+    f1 = make_func_events([(2, ENTRY, 0), (2, EXIT, 100)], tid=1)
+    ce = empty_comm_events(3)
+    ce["rank"] = 0
+    ce["tid"] = [0, 0, 1]
+    ce["ts"] = [20, 50, 60]
+    ce["partner"] = [1, 2, 3]
+    ce["nbytes"] = [100, 200, 300]
+    frame = Frame(
+        app=0, rank=0, step=0,
+        func_events=np.concatenate([f0, f1]), comm_events=ce,
+    )
+    return frame
+
+
+def _result_for(frame, anomaly_fid):
+    builder = CallStackBuilder(rank=frame.rank)
+    records, ctx = builder.process(frame)
+    records["label"] = 0
+    idx = int(np.nonzero(records["fid"] == anomaly_fid)[0][0])
+    records["label"][idx] = 1
+    return ADFrameResult(
+        step=frame.step, rank=frame.rank, records=records, ctx=ctx,
+        anomaly_idx=np.asarray([idx]), n_events=len(frame.func_events),
+        raw_bytes=frame.nbytes_raw(),
+    )
+
+
+def test_comm_attribution_excludes_child_and_sibling_events():
+    # Pre-fix ingest attached every same-rank comm event inside the
+    # anomaly's [entry, exit] window — here all three. Attribution must keep
+    # only the event the call-stack builder mapped to the anomalous call.
+    frame = _comm_frame()
+    db = ProvenanceDB()
+    db.ingest(_result_for(frame, anomaly_fid=0), frame.comm_events)
+    (doc,) = db.records
+    assert [c["ts"] for c in doc["comm"]] == [50]
+
+    db2 = ProvenanceDB()
+    db2.ingest(_result_for(frame, anomaly_fid=1), frame.comm_events)
+    assert [c["ts"] for c in db2.records[0]["comm"]] == [20]
+
+    # tid 1's call owns only its own event, not tid 0's same-rank traffic.
+    db3 = ProvenanceDB()
+    db3.ingest(_result_for(frame, anomaly_fid=2), frame.comm_events)
+    assert [c["ts"] for c in db3.records[0]["comm"]] == [60]
+
+
+def test_comm_attribution_window_fallback():
+    # A frame with no attribution at all falls back to the same-rank
+    # [entry, exit] window test.
+    frame = _comm_frame()
+    res = _result_for(frame, anomaly_fid=0)
+    res.ctx.comm_entry_row[:] = -1
+    db = ProvenanceDB()
+    db.ingest(res, frame.comm_events)
+    assert [c["ts"] for c in db.records[0]["comm"]] == [20, 50, 60]
+
+
+def test_append_resume_keeps_prior_records(tmp_path):
+    path = str(tmp_path / "prov.jsonl")
+    frame = _comm_frame()
+    db = ProvenanceDB(path=path, run_info=FIXED_RUN_INFO)
+    db.ingest(_result_for(frame, anomaly_fid=0), frame.comm_events)
+    db.close()
+
+    # Resume: no truncation, no duplicate header, prior docs queryable.
+    db2 = ProvenanceDB(path=path, run_info=FIXED_RUN_INFO, append=True)
+    assert len(db2) == 1 and db2.query(rank=0)
+    db2.ingest(_result_for(frame, anomaly_fid=1), frame.comm_events)
+    db2.close()
+
+    lines = [json.loads(l) for l in open(path)]
+    assert [d["type"] for d in lines] == ["run_info", "anomaly", "anomaly"]
+    assert len(db2) == 2
+
+    # Default (no append) still starts a fresh store.
+    db3 = ProvenanceDB(path=path, run_info=FIXED_RUN_INFO)
+    db3.close()
+    lines = [json.loads(l) for l in open(path)]
+    assert [d["type"] for d in lines] == ["run_info"]
+
+
+def test_federated_append_resume(tmp_path):
+    path = str(tmp_path / "prov.jsonl")
+    frame = _comm_frame()
+    fed = FederatedProvenanceDB(num_shards=2, path=path, run_info=FIXED_RUN_INFO)
+    # Ingest in *reverse* shard order (fid 1 -> shard 1 first, fid 0 ->
+    # shard 0 second): resume must restore global ingest order from the
+    # persisted seq, not shard-by-shard file order.
+    fed.ingest(_result_for(frame, anomaly_fid=1), frame.comm_events)
+    fed.ingest(_result_for(frame, anomaly_fid=0), frame.comm_events)
+    before = fed.records
+    assert [d["anomaly"]["fid"] for d in before] == [1, 0]
+    fed.close()
+
+    fed2 = FederatedProvenanceDB(
+        num_shards=2, path=path, run_info=FIXED_RUN_INFO, append=True
+    )
+    assert len(fed2) == 2 and fed2.records == before
+    fed2.close()
+
+
+@pytest.mark.parametrize("resume_shards", [1, 4])
+def test_federated_resume_across_topology_change(tmp_path, resume_shards):
+    # A run restarted with a different shard count must still see (and
+    # correctly route queries to) every pre-restart doc.
+    path = str(tmp_path / "prov.jsonl")
+    frame = _comm_frame()
+    fed = FederatedProvenanceDB(num_shards=2, path=path, run_info=FIXED_RUN_INFO)
+    for fid in (1, 0, 2):
+        fed.ingest(_result_for(frame, anomaly_fid=fid), frame.comm_events)
+    before = fed.records
+    fed.close()
+
+    fed2 = FederatedProvenanceDB(
+        num_shards=resume_shards, path=path, run_info=FIXED_RUN_INFO, append=True
+    )
+    assert fed2.records == before
+    for doc in before:
+        # point query routes by the *current* map and must find the doc
+        assert doc in fed2.query(rank=doc["rank"], fid=doc["anomaly"]["fid"])
+    fed2.ingest(_result_for(frame, anomaly_fid=1), frame.comm_events)
+    assert len(fed2) == 4
+    fed2.close()
+
+    # Third run at the original topology still sees everything once.
+    fed3 = FederatedProvenanceDB(
+        num_shards=2, path=path, run_info=FIXED_RUN_INFO, append=True
+    )
+    assert len(fed3) == 4
+    fed3.close()
+
+
+def _anomaly_stream(n_ranks=4, steps=30, seed=3):
+    spec = nwchem_like(anomaly_rate=0.01)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 50.0
+    gen = WorkloadGenerator(spec, n_ranks=n_ranks, seed=seed)
+    ads = {r: OnNodeAD(len(gen.registry), rank=r, min_samples=20) for r in range(n_ranks)}
+    stream = []
+    for step in range(steps):
+        for rank in range(n_ranks):
+            frame, _ = gen.frame(rank, step)
+            res = ads[rank].process_frame(frame)
+            if res.n_anomalies:
+                stream.append((res, frame.comm_events))
+    assert stream, "workload produced no anomalies"
+    return gen.registry, stream
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_federated_matches_single_store(tmp_path, num_shards):
+    registry, stream = _anomaly_stream()
+    single = ProvenanceDB(
+        path=str(tmp_path / "single.jsonl"), registry=registry,
+        run_info=FIXED_RUN_INFO,
+    )
+    fed = FederatedProvenanceDB(
+        num_shards=num_shards, path=str(tmp_path / "fed.jsonl"),
+        registry=registry, run_info=FIXED_RUN_INFO,
+    )
+    for res, comm in stream:
+        assert single.ingest(res, comm) == fed.ingest(res, comm)
+    single.close()
+    fed.close()
+
+    # Same docs, same (global ingest) order — full dump and every query axis.
+    assert fed.records == single.records
+    doc = single.records[0]
+    rank, fid = doc["rank"], doc["anomaly"]["fid"]
+    t_mid = doc["anomaly"]["entry"]
+    for q in (
+        {}, {"rank": rank}, {"fid": fid}, {"rank": rank, "fid": fid},
+        {"step": doc["step"]}, {"rank": rank, "fid": fid, "step": doc["step"]},
+        {"t0": t_mid - 500, "t1": t_mid + 500}, {"t0": t_mid}, {"t1": t_mid},
+    ):
+        assert fed.query(**q) == single.query(**q)
+    assert doc in fed.query(rank=rank, fid=fid)
+
+    if num_shards == 1:
+        # Degenerate case: byte-identical JSONL to the single store.
+        assert (tmp_path / "fed.jsonl").read_bytes() == (
+            tmp_path / "single.jsonl"
+        ).read_bytes()
+    else:
+        assert sum(fed.shard_doc_counts()) == len(single)
+        for s, p in enumerate(shard_paths(str(tmp_path / "fed.jsonl"), num_shards)):
+            docs = [json.loads(l) for l in open(p)][1:]
+            assert all(
+                shard_of(d["rank"], d["anomaly"]["fid"], num_shards) == s
+                for d in docs
+            )
+
+
+def test_monitor_with_sharded_provdb(tmp_path):
+    spec = nwchem_like(anomaly_rate=0.008)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 50.0
+    gen = WorkloadGenerator(spec, n_ranks=4, seed=0)
+    mon = ChimbukoMonitor(
+        num_funcs=len(gen.registry), registry=gen.registry,
+        prov_path=str(tmp_path / "prov.jsonl"), min_samples=20,
+        provdb_shards=4,
+    )
+    for step in range(40):
+        for rank in range(4):
+            frame, _ = gen.frame(rank, step)
+            mon.ingest(frame)
+    s = mon.summary()
+    assert s["anomalies"] > 0
+    assert s["provenance_records"] == s["anomalies"]
+    assert s["provdb_shards"] == 4
+    assert sum(s["provdb_shard_docs"]) == s["anomalies"]
+
+    viz = VizServer(mon)
+    doc = mon.provdb.records[0]
+    a = doc["anomaly"]
+    # Fig. 6 view served transparently through the federation.
+    csv_ = viz.call_stack_view(doc["rank"], a["entry"] - 10, a["exit"] + 10)
+    assert csv_["bars"]
+    # New raw provenance endpoint.
+    pv = viz.provenance_view(rank=doc["rank"], fid=a["fid"], limit=5)
+    assert pv["n_total"] >= 1 and pv["docs"][0] == doc
+    assert pv["topology"]["shards"] == 4
+    mon.close()
+
+
+def test_rank_dashboard_no_overlap():
+    mon = ChimbukoMonitor(num_funcs=4)
+    for rank, total in enumerate([10, 20, 30, 40]):
+        mon.ps.report_anomalies(rank, step=0, n_anomalies=total)
+    viz = VizServer(mon)
+    # 4 ranks, top=3 + bottom=3 > 4: bottom must not re-report top ranks.
+    dash = viz.rank_dashboard(stat="total", top=3, bottom=3)
+    top_ranks = [d["rank"] for d in dash["top"]]
+    bot_ranks = [d["rank"] for d in dash["bottom"]]
+    assert top_ranks == [3, 2, 1]
+    assert bot_ranks == [0]
+    assert not set(top_ranks) & set(bot_ranks)
+    # bottom is ascending (least problematic first).
+    dash = viz.rank_dashboard(stat="total", top=2, bottom=2)
+    assert [d["rank"] for d in dash["top"]] == [3, 2]
+    assert [d["rank"] for d in dash["bottom"]] == [0, 1]
+    assert [d["total"] for d in dash["bottom"]] == sorted(
+        d["total"] for d in dash["bottom"]
+    )
+    mon.close()
