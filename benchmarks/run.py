@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig9_reduction    trace-size reduction factors (Fig. 9)
   ps_sharding       PS federation update throughput vs shard count (§III-B2)
   provdb_sharding   provenance DB ingest/query throughput vs shard count (§V)
+  net_federation    in-process vs socket-worker shard scaling (repro.net)
   kernels           Pallas-vs-XLA micro-benchmarks
   roofline          per-cell roofline terms from the dry-run artifacts
 """
@@ -19,6 +20,7 @@ def main() -> None:
     from benchmarks import (
         bench_ad_scaling,
         bench_kernels,
+        bench_net_federation,
         bench_overhead,
         bench_provdb_sharding,
         bench_ps_sharding,
@@ -29,7 +31,8 @@ def main() -> None:
     failures = 0
     print("name,us_per_call,derived")
     for mod in (bench_ad_scaling, bench_overhead, bench_reduction,
-                bench_ps_sharding, bench_provdb_sharding, bench_kernels,
+                bench_ps_sharding, bench_provdb_sharding,
+                bench_net_federation, bench_kernels,
                 bench_roofline):
         try:
             mod.main()

@@ -24,6 +24,11 @@ Both stores index docs by (rank, fid, step) with a sorted entry-time index,
 so point and window queries are posting-list lookups instead of linear scans,
 and both support ``append=True`` resume: reopening an existing JSONL keeps
 the prior run's records (loaded back into the index) instead of truncating.
+
+The federation also runs cross-process: ``transport="socket"`` swaps each
+shard for a :mod:`repro.net` remote stub hosted by a
+``repro.launch.shard_server`` worker, byte-matched against local mode
+(docs/net.md).
 """
 from __future__ import annotations
 
@@ -293,6 +298,10 @@ class ProvenanceShard:
         out.sort(key=lambda sd: sd[0])
         return out
 
+    def dump(self) -> List[Tuple[int, Dict[str, Any]]]:
+        """Every (seq, doc) pair in shard-local order (federation merges)."""
+        return list(zip(self.seqs, self.docs))
+
     # ------------------------------------------------------------ lifecycle
     def flush(self) -> None:
         if self._fh:
@@ -393,6 +402,16 @@ class FederatedProvenanceDB:
     :class:`ProvenanceDB` would have returned, so ``num_shards=1`` is the
     bit-identical degenerate case and any shard count yields the same
     docs in the same order.
+
+    ``transport="socket"`` swaps every :class:`ProvenanceShard` for a
+    :class:`repro.net.shards.RemoteProvenanceShard` stub over one of
+    ``endpoints`` (``repro.launch.shard_server`` workers): each shard's
+    JSONL file + index live in its worker process, docs/queries travel as
+    the same JSON the local shard would have indexed, and the worker assigns
+    the same global ``seq`` — so federated query results and shard files are
+    byte-identical to local mode while ingest/index work escapes this
+    process's GIL.  Shard paths are resolved in the *worker*: same-host
+    workers or a shared filesystem keep resume semantics intact.
     """
 
     def __init__(
@@ -403,9 +422,18 @@ class FederatedProvenanceDB:
         k_neighbors: int = 5,
         run_info: Optional[Dict[str, Any]] = None,
         append: bool = False,
+        transport: str = "local",
+        endpoints=None,
     ):
+        if transport not in ("local", "socket"):
+            raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
+        if transport == "socket":
+            if not endpoints:
+                raise ValueError("transport='socket' requires endpoints")
+            num_shards = len(endpoints)
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.transport = transport
         self.num_shards = num_shards
         self.path = path
         self.registry = registry
@@ -413,9 +441,17 @@ class FederatedProvenanceDB:
         self._seq = 0
         header = {"type": "run_info", **static_provenance(run_info)} if path else None
         owned = shard_paths(path, num_shards)
-        self.shards = [
-            ProvenanceShard(path=p, append=append, header=header) for p in owned
-        ]
+        if transport == "socket":
+            from repro.net.shards import RemoteProvenanceShard  # lazy: no core→net dep
+
+            self.shards = [
+                RemoteProvenanceShard(ep, path=p, append=append, header=header)
+                for ep, p in zip(endpoints, owned)
+            ]
+        else:
+            self.shards = [
+                ProvenanceShard(path=p, append=append, header=header) for p in owned
+            ]
         if append:
             # Resume is topology-agnostic: prior docs are gathered from the
             # whole path family (the owned shard files plus any base-path /
@@ -430,11 +466,19 @@ class FederatedProvenanceDB:
                 resumed.extend(shard.take_resumed())
             for p in self._extra_resume_paths(owned):
                 resumed.extend(_read_docs(p))
+            inflight = []
             for doc in _resume_order(resumed):
                 seq = doc.get("seq", self._seq)
                 s = shard_of(doc["rank"], doc["anomaly"]["fid"], num_shards)
-                self.shards[s].add(doc, seq, write=False)
+                shard = self.shards[s]
+                add_async = getattr(shard, "add_async", None)
+                if add_async is not None:  # pipeline: N docs, not N round-trips
+                    inflight.append((shard, add_async(doc, seq, write=False)))
+                else:
+                    shard.add(doc, seq, write=False)
                 self._seq = max(self._seq, seq + 1)
+            for shard, fut in inflight:
+                shard.finish(fut)
 
     def _extra_resume_paths(self, owned: List[Optional[str]]) -> List[str]:
         """Non-empty provenance files of this path family not owned by the
@@ -454,19 +498,41 @@ class FederatedProvenanceDB:
 
     # ------------------------------------------------------------- mutation
     def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
-        """Route every anomaly doc of a frame to its owning shard."""
+        """Route every anomaly doc of a frame to its owning shard.
+
+        Remote shards expose ``add_async``: the frame's adds go out pipelined
+        (per-shard order preserved by the connection) and are awaited before
+        the flush, so socket-mode ingest overlaps shard work across worker
+        processes without changing what any shard observes.
+        """
         touched = set()
         n = 0
+        inflight = []
         for idx in result.anomaly_idx:
             idx = int(idx)
             doc = build_anomaly_doc(result, idx, self.registry, self.k, comm_events)
             s = shard_of(doc["rank"], doc["anomaly"]["fid"], self.num_shards)
-            self.shards[s].add(doc, self._seq)
+            shard = self.shards[s]
+            add_async = getattr(shard, "add_async", None)
+            if add_async is not None:
+                inflight.append((shard, add_async(doc, self._seq)))
+            else:
+                shard.add(doc, self._seq)
             self._seq += 1
             touched.add(s)
             n += 1
+        for shard, fut in inflight:
+            shard.finish(fut)
+        flushing = []
         for s in touched:
-            self.shards[s].flush()
+            shard = self.shards[s]
+            flush_async = getattr(shard, "flush_async", None)
+            if flush_async is not None:
+                flushing.append((shard, flush_async()))
+            else:
+                shard.flush()
+        for shard, fut in flushing:
+            shard.finish(fut)
         return n
 
     # -------------------------------------------------------------- queries
@@ -494,7 +560,7 @@ class FederatedProvenanceDB:
     @property
     def records(self) -> List[Dict[str, Any]]:
         """All docs in global ingest order (the single-store ``records`` view)."""
-        per_shard = [list(zip(shard.seqs, shard.docs)) for shard in self.shards]
+        per_shard = [shard.dump() for shard in self.shards]
         return [doc for _, doc in heapq.merge(*per_shard, key=lambda sd: sd[0])]
 
     # ------------------------------------------------------------ lifecycle

@@ -25,6 +25,11 @@ count (§III-B2):
     its own pending delta merged onto the last global snapshot, which keeps
     labeling semantics close to the unbatched path (staleness < batch size).
 
+The federation also runs cross-process: ``transport="socket"`` swaps each
+:class:`PSShard` for a :mod:`repro.net` remote stub hosted by a
+``repro.launch.shard_server`` worker process, bit-matched against local mode
+(docs/net.md) — the paper's actual multi-instance PS deployment shape.
+
 Threading model: many producer threads (one per simulated rank) may call
 ``update_and_fetch`` concurrently; locks guard only O(F/S) numpy work. A
 ``staleness`` knob on the single server lets tests emulate delayed snapshots
@@ -193,6 +198,15 @@ class FederatedPS(AnomalyFeed):
     ``snapshot()`` always forces a fresh aggregation: offline consumers (viz
     dumps, equivalence tests) get the exact union of all pushed deltas,
     bit-matching a single :class:`ParameterServer` fed the same stream.
+
+    ``transport="socket"`` swaps every :class:`PSShard` for a
+    :class:`repro.net.shards.RemotePSShard` stub over one of ``endpoints``
+    (``host:port`` pairs of ``repro.launch.shard_server`` workers), so shard
+    merges run in separate processes — same routing, same aggregation, same
+    bit-match guarantee (stats rows travel as raw float64 bytes), but the
+    per-shard work escapes this process's GIL.  The per-shard pushes of one
+    delta are pipelined (one request in flight per touched shard) so socket
+    latency is paid once per update, not once per shard.
     """
 
     def __init__(
@@ -200,13 +214,29 @@ class FederatedPS(AnomalyFeed):
         num_funcs: int,
         num_shards: int = 4,
         aggregate_every: int = 16,
+        transport: str = "local",
+        endpoints=None,
     ):
         super().__init__()
+        if transport not in ("local", "socket"):
+            raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
+        if transport == "socket":
+            if not endpoints:
+                raise ValueError("transport='socket' requires endpoints")
+            from repro.net.shards import RemotePSShard  # lazy: core must not need net
+
+            num_shards = len(endpoints)
+            self.shards = [
+                RemotePSShard(ep, s, num_shards, num_funcs)
+                for s, ep in enumerate(endpoints)
+            ]
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.transport = transport
         self.num_shards = num_shards
         self._num_funcs = num_funcs
-        self.shards = [PSShard(s, num_shards, num_funcs) for s in range(num_shards)]
+        if transport == "local":
+            self.shards = [PSShard(s, num_shards, num_funcs) for s in range(num_shards)]
         self._aggregate_every = max(int(aggregate_every), 1)
         self._size_lock = threading.Lock()  # guards _num_funcs growth
         self._count_lock = threading.Lock()  # guards n_updates / refresh decision
@@ -240,11 +270,24 @@ class FederatedPS(AnomalyFeed):
         # One O(F) pass finds the shards this frame touched (rows with n > 0)
         # so untouched shards see neither a lock acquisition nor a merge.
         touched = np.unique(np.nonzero(delta[:, N] > 0)[0] % S) if S > 1 else (0,)
-        for s in touched:
-            shard = self.shards[s]
-            rows = delta[shard.shard_id :: S]
-            if rows.shape[0]:
-                shard.push(rows)
+        if self.transport == "socket":
+            # Pipeline: one push in flight per touched shard, then wait all —
+            # the shard processes merge concurrently instead of serializing
+            # on round-trips.
+            inflight = []
+            for s in touched:
+                shard = self.shards[s]
+                rows = delta[shard.shard_id :: S]
+                if rows.shape[0]:
+                    inflight.append((shard, shard.push_async(rows)))
+            for shard, fut in inflight:
+                shard.finish(fut)
+        else:
+            for s in touched:
+                shard = self.shards[s]
+                rows = delta[shard.shard_id :: S]
+                if rows.shape[0]:
+                    shard.push(rows)
         with self._count_lock:
             self.n_updates += 1
             refresh = self.n_updates - self._agg_at >= self._aggregate_every
@@ -295,6 +338,13 @@ class FederatedPS(AnomalyFeed):
         """Per-shard push counts — the load-balance view of the federation."""
         return [shard.n_pushes for shard in self.shards]
 
+    def close(self) -> None:
+        """Release transport resources (no-op for in-process shards)."""
+        for shard in self.shards:
+            close = getattr(shard, "close", None)
+            if close is not None:
+                close()
+
 
 class BatchedPSClient:
     """Client-side delta coalescing for any PS with ``update_and_fetch``.
@@ -308,6 +358,20 @@ class BatchedPSClient:
     per frame, no locks, no view rebuilds).  Callers that want the freshest
     possible view (stale global ⊕ pending local) can ask for :meth:`view`.
 
+    Two buffering granularities:
+
+      * :meth:`update_and_fetch` — the delta path: per-frame (F, 7) deltas,
+        one Pébay merge per frame (k merges per flush).
+      * :meth:`push_events` — the event path: raw (fid, runtime) buffers are
+        only *concatenated* per frame; ONE segment reduction over the whole
+        batch runs at flush time.  This trades k O(F) merges for one
+        O(E log E) reduction, which wins whenever frames are sparse in fid
+        space (the common trace shape) — the client-side merge cost drops
+        roughly by the batch factor.
+
+    Both paths may be mixed; a flush folds the event buffer into the pending
+    delta before the single server round-trip.
+
     Not thread-safe: one instance per producing rank, by design.
     """
 
@@ -318,6 +382,9 @@ class BatchedPSClient:
         self._pending: Optional[np.ndarray] = None
         self._pending_count = 0
         self._last_global: Optional[np.ndarray] = None
+        self._ev_fids: List[np.ndarray] = []
+        self._ev_vals: List[np.ndarray] = []
+        self._ev_funcs = 0
         self.n_flushes = 0
 
     # --------------------------------------------------------------- client
@@ -342,8 +409,49 @@ class BatchedPSClient:
         self._last_global = last = pad_table(last, self._pending.shape[0])
         return last
 
+    def push_events(
+        self, step: int, fids: np.ndarray, runtimes: np.ndarray
+    ) -> Optional[np.ndarray]:
+        """Buffer one frame's raw (fid, runtime) events; reduce only at flush.
+
+        Returns the same (possibly stale) snapshot contract as
+        :meth:`update_and_fetch`; ``None`` until the first flush when no
+        snapshot has been fetched yet.
+        """
+        fids = np.asarray(fids, dtype=np.int64)
+        if fids.size:
+            self._ev_fids.append(fids)
+            self._ev_vals.append(np.asarray(runtimes, dtype=np.float64))
+            self._ev_funcs = max(self._ev_funcs, int(fids.max()) + 1)
+        self._pending_count += 1
+        if self._pending_count >= self.batch_frames:
+            return self.flush(step)
+        last = self._last_global
+        if last is None:
+            return None
+        self._last_global = last = pad_table(last, self._ev_funcs)
+        return last
+
+    def _reduce_events(self) -> None:
+        """Fold the raw event buffer into ``_pending``: ONE segment reduction
+        over the concatenated batch instead of one per buffered frame."""
+        if not self._ev_fids:
+            return
+        F = max(self._ev_funcs, 1)
+        if self._pending is not None:
+            F = max(F, self._pending.shape[0])
+        delta = StatsTable(F).batch_table(
+            np.concatenate(self._ev_fids), np.concatenate(self._ev_vals)
+        )
+        self._ev_fids, self._ev_vals, self._ev_funcs = [], [], 0
+        if self._pending is None:
+            self._pending = delta
+        else:
+            self._pending = merge_moments(pad_table(self._pending, F), delta)
+
     def view(self) -> Optional[np.ndarray]:
         """Freshest client view: last global snapshot ⊕ pending local delta."""
+        self._reduce_events()
         if self._pending is None:
             return self._last_global
         if self._last_global is None:
@@ -352,7 +460,9 @@ class BatchedPSClient:
 
     def flush(self, step: int = -1) -> Optional[np.ndarray]:
         """Push the coalesced pending delta; returns the fresh global view."""
+        self._reduce_events()
         if self._pending is None:
+            self._pending_count = 0
             return self._last_global
         snap = self.ps.update_and_fetch(self.rank, step, self._pending)
         self._pending = None

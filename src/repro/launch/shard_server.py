@@ -1,0 +1,191 @@
+"""Shard-host launcher: PS / provenance shards in worker processes.
+
+This is what moves the federations out of the front-end process (paper
+§III-B2: on Summit the parameter servers and provenance DB shards run as
+separate processes on separate nodes).  Each worker hosts one generic RPC
+shard server (``repro.net``) whose PS/provenance state is created lazily by
+the federation front-end's ``configure`` call — workers need no topology
+knowledge at spawn time, only a port.
+
+Three ways to get endpoints:
+
+  * :class:`ShardServerPool` — N worker *processes* on this host (the
+    GIL-escaping path; ``multiprocessing`` spawn context so workers never
+    inherit the parent's JAX/threads state), used by benchmarks and tests.
+  * :class:`LocalShardHost` — N servers on threads *in this process*: the
+    full wire path without process-spawn cost.  Useful for fast equivalence
+    tests; useless for shard scaling (still one GIL).
+  * the CLI — ``python -m repro.launch.shard_server --shards 4`` on each
+    host; it spawns the worker processes, prints the comma-separated
+    ``host:port,...`` endpoint list, then serves until killed.  Point
+    ``--shard-endpoints`` of ``repro.launch.train`` (or any federation's
+    ``endpoints=``) at the union of the printed endpoints.
+
+Endpoint strings are ``host:port``; :func:`parse_endpoints` converts the
+comma-separated flag form, and ``spawn:N`` asks the driver to spawn a local
+pool instead (dev/single-host convenience).
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+from repro.net.server import RPCServer
+from repro.net.shards import build_shard_table
+
+Endpoint = Tuple[str, int]
+
+
+def parse_endpoints(spec: str) -> List[Endpoint]:
+    """``"host:port,host:port,..."`` → [(host, port), ...]."""
+    out: List[Endpoint] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        host, _, port = part.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad endpoint {part!r} (want host:port)")
+        out.append((host, int(port)))
+    if not out:
+        raise ValueError(f"no endpoints in {spec!r}")
+    return out
+
+
+def format_endpoints(endpoints: Sequence[Endpoint]) -> str:
+    return ",".join(f"{h}:{p}" for h, p in endpoints)
+
+
+def _worker_main(kind: str, host: str, port: int, conn) -> None:
+    """Worker-process body: build one shard server, report its endpoint,
+    serve until killed.  Kept import-light (numpy only — no jax) so spawned
+    workers start fast and never trip accelerator probing."""
+    server = RPCServer(build_shard_table(kind), host=host, port=port)
+    server.start()
+    conn.send(server.endpoint)
+    conn.close()
+    server.serve_forever()
+
+
+class ShardServerPool:
+    """N shard-host worker processes on this machine; context-manageable."""
+
+    def __init__(
+        self,
+        num_shards: int,
+        kind: str = "both",
+        host: str = "127.0.0.1",
+        start_method: str = "spawn",
+        spawn_timeout: float = 60.0,
+        port_base: int = 0,
+    ):
+        ctx = multiprocessing.get_context(start_method)
+        self.procs: List[multiprocessing.Process] = []
+        self.endpoints: List[Endpoint] = []
+        try:
+            for i in range(num_shards):
+                parent, child = ctx.Pipe()
+                port = 0 if port_base == 0 else port_base + i
+                p = ctx.Process(
+                    target=_worker_main, args=(kind, host, port, child), daemon=True
+                )
+                p.start()
+                child.close()
+                self.procs.append(p)
+                if not parent.poll(spawn_timeout):
+                    raise RuntimeError(
+                        f"shard worker {len(self.procs) - 1} did not report an "
+                        f"endpoint within {spawn_timeout}s"
+                    )
+                try:
+                    self.endpoints.append(parent.recv())
+                except EOFError:
+                    raise RuntimeError(
+                        f"shard worker {len(self.procs) - 1} died during startup "
+                        f"(exitcode {p.exitcode})"
+                    ) from None
+                parent.close()
+        except BaseException:
+            self.stop()
+            raise
+
+    def stop(self) -> None:
+        for p in self.procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self.procs:
+            p.join(timeout=10)
+        self.procs = []
+
+    def __enter__(self) -> "ShardServerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class LocalShardHost:
+    """N shard servers on threads in this process (tests/debug only)."""
+
+    def __init__(self, num_shards: int, kind: str = "both", host: str = "127.0.0.1"):
+        self.servers = [
+            RPCServer(build_shard_table(kind), host=host).start()
+            for _ in range(num_shards)
+        ]
+        self.endpoints: List[Endpoint] = [s.endpoint for s in self.servers]
+
+    def stop(self) -> None:
+        for s in self.servers:
+            s.stop()
+
+    def __enter__(self) -> "LocalShardHost":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def resolve_endpoints(
+    spec: Optional[str], kind: str = "both"
+) -> Tuple[Optional[List[Endpoint]], Optional[ShardServerPool]]:
+    """Resolve a ``--shard-endpoints`` flag value.
+
+    ``"host:port,..."`` → (endpoints, None); ``"spawn:N"`` → a fresh local
+    :class:`ShardServerPool` the caller must ``stop()``; ``None`` → (None,
+    None).
+    """
+    if spec is None:
+        return None, None
+    if spec.startswith("spawn:"):
+        pool = ShardServerPool(int(spec.split(":", 1)[1]), kind=kind)
+        return pool.endpoints, pool
+    return parse_endpoints(spec), None
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, default=1, help="shard servers to host")
+    ap.add_argument("--kind", choices=("ps", "prov", "both"), default="both")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument(
+        "--port-base", type=int, default=0,
+        help="first port (consecutive ports for the rest); 0 = OS-assigned",
+    )
+    args = ap.parse_args(argv)
+    pool = ShardServerPool(
+        args.shards, kind=args.kind, host=args.host, port_base=args.port_base
+    )
+    print(format_endpoints(pool.endpoints), flush=True)
+    try:
+        for p in pool.procs:  # serve until killed
+            p.join()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        pool.stop()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -47,6 +47,9 @@ def train(
     opts: StepOptions = StepOptions(ce_chunk=512, opt=OptConfig(warmup_steps=10, peak_lr=1e-3)),
     log_every: int = 10,
     provdb_shards: int = 1,
+    ps_transport: str = "local",
+    provdb_transport: str = "local",
+    shard_endpoints: Optional[str] = None,
 ) -> Dict:
     cfg = configs.smoke(arch) if smoke else configs.get_config(arch)
     ctx = make_shard_ctx(cfg, None, global_batch, opts)
@@ -62,61 +65,81 @@ def train(
             start_step, state = restored
             print(f"[train] resumed from checkpoint at step {start_step}")
 
-    # On a checkpoint resume the provenance store appends instead of
-    # truncating, so the elastic/auto-restart path keeps every pre-failure
-    # anomaly record.
-    monitor = ChimbukoMonitor(
-        num_funcs=32,
-        prov_path=os.path.join(monitor_dir, "provenance.jsonl") if monitor_dir else None,
-        min_samples=8, alpha=6.0, straggler_alpha=3.0, straggler_min_steps=8,
-        run_info={"arch": cfg.name, "steps": steps, "global_batch": global_batch},
-        provdb_shards=provdb_shards,
-        prov_append=start_step > 0,
-    )
-    monitor.on_straggler(
-        lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
-    )
-    tracer = Tracer(monitor.registry, rank=0)
+    # Socket transports host the PS / provenance shards in separate worker
+    # processes (repro.launch.shard_server): pass "host:port,..." of running
+    # workers, or "spawn:N" to spawn a local pool for this run's lifetime.
+    endpoints, pool = (None, None)
+    if ps_transport == "socket" or provdb_transport == "socket":
+        from repro.launch.shard_server import resolve_endpoints
+
+        endpoints, pool = resolve_endpoints(shard_endpoints)
+        if endpoints is None:
+            raise ValueError(
+                "socket transport needs --shard-endpoints (host:port,... or spawn:N)"
+            )
 
     history = []
-    for step in range(start_step, steps):
-        t0 = time.perf_counter()
-        with tracer.span("train/step"):
-            with tracer.span("train/data"):
-                batch = {k: jax.numpy.asarray(v) for k, v in stream.batch_at(step).items()}
-            with tracer.span("train/fwd_bwd_update"):
-                state, metrics = step_fn(state, batch)
-                loss = float(metrics["loss"])
-            if inject_straggler_at is not None and step == inject_straggler_at:
-                with tracer.span("train/injected_delay"):
-                    time.sleep(0.5)
-            if mgr is not None:
-                with tracer.span("train/checkpoint", filterable=False):
-                    mgr.maybe_save(step + 1, state)
-        dt = time.perf_counter() - t0
-        monitor.ingest(tracer.drain(step))
-        if step - start_step >= 2:  # compile-step outliers would poison sigma
-            monitor.record_step_times(step, {0: dt})
-        history.append({"step": step, "loss": loss, "time_s": dt})
-        if step % log_every == 0:
-            print(f"[train] step {step:5d} loss {loss:.4f} {dt*1e3:.0f} ms")
-        if fail_at is not None and step + 1 == fail_at:
-            if mgr is not None:
-                mgr.wait()  # fail-stop after in-flight async save settles,
-                # so the injected failure is deterministic for resume tests
-            print(f"[train] simulated failure at step {step + 1}")
-            raise RuntimeError("injected node failure")
+    try:
+        # On a checkpoint resume the provenance store appends instead of
+        # truncating, so the elastic/auto-restart path keeps every pre-failure
+        # anomaly record.
+        monitor = ChimbukoMonitor(
+            num_funcs=32,
+            prov_path=os.path.join(monitor_dir, "provenance.jsonl") if monitor_dir else None,
+            min_samples=8, alpha=6.0, straggler_alpha=3.0, straggler_min_steps=8,
+            run_info={"arch": cfg.name, "steps": steps, "global_batch": global_batch},
+            provdb_shards=provdb_shards,
+            prov_append=start_step > 0,
+            ps_transport=ps_transport,
+            provdb_transport=provdb_transport,
+            shard_endpoints=endpoints,
+        )
+        monitor.on_straggler(
+            lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
+        )
+        tracer = Tracer(monitor.registry, rank=0)
 
-    if mgr is not None:
-        mgr.maybe_save(steps, state, force=True)
-        mgr.wait()
-    summary = monitor.summary()
-    if monitor_dir:
-        os.makedirs(monitor_dir, exist_ok=True)
-        VizServer(monitor).dump(os.path.join(monitor_dir, "viz.json"))
-        with open(os.path.join(monitor_dir, "history.json"), "w") as f:
-            json.dump(history, f)
-    monitor.close()
+        for step in range(start_step, steps):
+            t0 = time.perf_counter()
+            with tracer.span("train/step"):
+                with tracer.span("train/data"):
+                    batch = {k: jax.numpy.asarray(v) for k, v in stream.batch_at(step).items()}
+                with tracer.span("train/fwd_bwd_update"):
+                    state, metrics = step_fn(state, batch)
+                    loss = float(metrics["loss"])
+                if inject_straggler_at is not None and step == inject_straggler_at:
+                    with tracer.span("train/injected_delay"):
+                        time.sleep(0.5)
+                if mgr is not None:
+                    with tracer.span("train/checkpoint", filterable=False):
+                        mgr.maybe_save(step + 1, state)
+            dt = time.perf_counter() - t0
+            monitor.ingest(tracer.drain(step))
+            if step - start_step >= 2:  # compile-step outliers would poison sigma
+                monitor.record_step_times(step, {0: dt})
+            history.append({"step": step, "loss": loss, "time_s": dt})
+            if step % log_every == 0:
+                print(f"[train] step {step:5d} loss {loss:.4f} {dt*1e3:.0f} ms")
+            if fail_at is not None and step + 1 == fail_at:
+                if mgr is not None:
+                    mgr.wait()  # fail-stop after in-flight async save settles,
+                    # so the injected failure is deterministic for resume tests
+                print(f"[train] simulated failure at step {step + 1}")
+                raise RuntimeError("injected node failure")
+
+        if mgr is not None:
+            mgr.maybe_save(steps, state, force=True)
+            mgr.wait()
+        summary = monitor.summary()
+        if monitor_dir:
+            os.makedirs(monitor_dir, exist_ok=True)
+            VizServer(monitor).dump(os.path.join(monitor_dir, "viz.json"))
+            with open(os.path.join(monitor_dir, "history.json"), "w") as f:
+                json.dump(history, f)
+        monitor.close()
+    finally:
+        if pool is not None:
+            pool.stop()  # a spawn:N worker pool lives exactly one train() call
     return {"history": history, "monitor": summary, "final_loss": history[-1]["loss"] if history else None}
 
 
@@ -135,6 +158,13 @@ def main():
     ap.add_argument("--auto-restart", action="store_true")
     ap.add_argument("--inject-straggler-at", type=int, default=None)
     ap.add_argument("--provdb-shards", type=int, default=1)
+    ap.add_argument("--ps-transport", choices=("local", "socket"), default="local")
+    ap.add_argument("--provdb-transport", choices=("local", "socket"), default="local")
+    ap.add_argument(
+        "--shard-endpoints", default=None,
+        help="shard_server workers as host:port,... — or spawn:N to spawn a "
+        "local worker pool for this run (required with a socket transport)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -144,6 +174,8 @@ def main():
         monitor_dir=args.monitor_dir, ckpt_interval=args.ckpt_interval,
         seed=args.seed, inject_straggler_at=args.inject_straggler_at,
         provdb_shards=args.provdb_shards,
+        ps_transport=args.ps_transport, provdb_transport=args.provdb_transport,
+        shard_endpoints=args.shard_endpoints,
     )
     if args.auto_restart:
         attempts = 0

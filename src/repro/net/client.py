@@ -1,0 +1,260 @@
+"""Reconnecting, pipelining RPC client for :mod:`repro.net.server`.
+
+One :class:`RPCClient` owns one TCP connection plus a reader thread.  Calls
+are pipelined: ``call_async`` assigns a request id, appends the frame to the
+socket under a send lock, and returns a future immediately — many requests
+can be in flight before the first response arrives, and the reader thread
+resolves futures by request id as responses stream back.  ``call`` is the
+synchronous wrapper with a per-call timeout.
+
+Failure semantics are typed and loud (the federation must degrade visibly,
+never silently):
+
+  * server unreachable / connection dropped → :class:`ConnectionLost`
+    (every in-flight future fails; the *next* call transparently retries the
+    connection, so a restarted server is picked up without client surgery),
+  * response later than the per-call timeout   → :class:`CallTimeout`,
+  * handler raised on the server               → :class:`RemoteError`
+    carrying the remote exception type and message.
+
+Method names are resolved to numeric ids during a synchronous connect-time
+handshake through the reserved ``METHOD_RESOLVE`` id, so the client needs no
+compiled-in method constants.  Connections are generation-numbered: a late
+error from a dead connection's reader can never fail calls already riding a
+newer connection.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import socket
+import threading
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .framing import (
+    ERROR,
+    METHOD_RESOLVE,
+    REQUEST,
+    RESPONSE,
+    CallTimeout,
+    ConnectionLost,
+    FrameDecoder,
+    FramingError,
+    RemoteError,
+    encode_frame,
+)
+
+CallResult = Tuple[dict, Tuple[np.ndarray, ...]]
+
+
+def _shutdown_close(sock: socket.socket) -> None:
+    """Shutdown *then* close: close() alone may not wake a thread blocked in
+    recv() on this socket (the in-flight syscall keeps the fd alive on some
+    kernels), which would leak the reader thread."""
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass
+
+
+class RPCClient:
+    """One connection to one RPC server; thread-safe, pipelined, reconnecting."""
+
+    def __init__(
+        self,
+        endpoint: Tuple[str, int],
+        timeout: float = 30.0,
+        connect_retries: int = 40,
+        retry_delay: float = 0.25,
+    ):
+        self.endpoint = (endpoint[0], int(endpoint[1]))
+        self.timeout = timeout
+        self.connect_retries = connect_retries
+        self.retry_delay = retry_delay
+        self._lock = threading.Lock()  # guards socket/gen/methods + sends + rid
+        self._sock: Optional[socket.socket] = None
+        self._gen = 0  # connection generation; tags pending calls
+        self._methods: Dict[str, int] = {}
+        self._pending_lock = threading.Lock()
+        self._pending: Dict[int, Tuple[int, str, concurrent.futures.Future]] = {}
+        self._next_rid = 1
+        self._closed = False
+        with self._lock:
+            self._connect()
+
+    # ------------------------------------------------------------ connection
+    def _connect(self) -> None:
+        """Dial + handshake synchronously; caller holds ``_lock``."""
+        if self._closed:
+            raise ConnectionLost(f"client for {self.endpoint} is closed")
+        last: Optional[Exception] = None
+        sock = None
+        for attempt in range(max(self.connect_retries, 1)):
+            try:
+                sock = socket.create_connection(self.endpoint, timeout=self.timeout)
+                break
+            except OSError as e:
+                last = e
+                if attempt + 1 < max(self.connect_retries, 1):
+                    time.sleep(self.retry_delay)
+        if sock is None:
+            raise ConnectionLost(
+                f"cannot connect to {self.endpoint[0]}:{self.endpoint[1]}: {last}"
+            ) from last
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # Method-table handshake, synchronous on the fresh socket (no reader
+        # thread yet, so no future/lock interplay during connect).
+        try:
+            sock.settimeout(self.timeout)
+            sock.sendall(encode_frame(METHOD_RESOLVE, REQUEST, 0, {}))
+            decoder = FrameDecoder()
+            frames = []
+            while not frames:
+                data = sock.recv(1 << 20)
+                if not data:
+                    raise ConnectionLost(
+                        f"server {self.endpoint} closed during handshake"
+                    )
+                frames = decoder.feed(data)
+            sock.settimeout(None)
+        except (OSError, FramingError) as e:
+            sock.close()
+            raise ConnectionLost(f"handshake with {self.endpoint} failed: {e}") from e
+        self._methods = {
+            str(k): int(v) for k, v in frames[0].env.get("methods", {}).items()
+        }
+        self._gen += 1
+        self._sock = sock
+        threading.Thread(
+            target=self._read_loop, args=(sock, self._gen), daemon=True,
+            name=f"rpc-reader:{self.endpoint[1]}",
+        ).start()
+
+    def _send_locked(
+        self, method_id: int, env: dict, arrays: Sequence[np.ndarray], name: str
+    ) -> concurrent.futures.Future:
+        """Frame + send one request; caller holds ``_lock``."""
+        rid = self._next_rid
+        self._next_rid = (self._next_rid + 1) % (1 << 32) or 1
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        with self._pending_lock:
+            self._pending[rid] = (self._gen, name, fut)
+        try:
+            assert self._sock is not None
+            self._sock.sendall(encode_frame(method_id, REQUEST, rid, env, arrays))
+        except OSError as e:
+            # Inline cleanup — we already hold _lock, so no _drop_connection
+            # here.  The reader thread will fail this gen's other in-flight
+            # calls when it observes the dead socket.
+            with self._pending_lock:
+                self._pending.pop(rid, None)
+            _shutdown_close(self._sock)
+            self._sock = None
+            raise ConnectionLost(f"send to {self.endpoint} failed: {e}") from e
+        return fut
+
+    def _read_loop(self, sock: socket.socket, gen: int) -> None:
+        decoder = FrameDecoder()
+        err: Exception
+        try:
+            while True:
+                data = sock.recv(1 << 20)
+                if not data:
+                    decoder.close()  # raises TruncatedStream on a partial frame
+                    err = ConnectionLost(
+                        f"server {self.endpoint} closed the connection"
+                    )
+                    break
+                for frame in decoder.feed(data):
+                    self._resolve(frame)
+        except FramingError as e:
+            err = e
+        except Exception as e:  # incl. OSError — a dead reader must fail its
+            # callers with a typed error, never strand them on the futures
+            err = ConnectionLost(f"connection to {self.endpoint} lost: {e}")
+        self._drop_connection(err, gen)
+
+    def _resolve(self, frame) -> None:
+        with self._pending_lock:
+            entry = self._pending.pop(frame.request_id, None)
+        if entry is None:
+            return  # response to a timed-out/abandoned call
+        _gen, name, fut = entry
+        if frame.kind == ERROR:
+            fut.set_exception(
+                RemoteError(
+                    frame.env.get("method", name),
+                    frame.env.get("etype", "Exception"),
+                    frame.env.get("message", ""),
+                )
+            )
+        elif frame.kind == RESPONSE:
+            fut.set_result((frame.env, frame.arrays))
+
+    def _drop_connection(self, err: Exception, gen: Optional[int]) -> None:
+        """Tear down generation ``gen`` (all generations when ``None``) and
+        fail its in-flight calls.  Never touches a newer connection."""
+        with self._lock:
+            if (gen is None or gen == self._gen) and self._sock is not None:
+                _shutdown_close(self._sock)
+                self._sock = None
+        with self._pending_lock:
+            doomed = [
+                rid for rid, (g, _n, _f) in self._pending.items()
+                if gen is None or g == gen
+            ]
+            entries = [self._pending.pop(rid) for rid in doomed]
+        for _g, _name, fut in entries:
+            if not fut.done():
+                fut.set_exception(err)
+
+    # ----------------------------------------------------------------- calls
+    def call_async(
+        self, name: str, env: Optional[dict] = None, arrays: Sequence[np.ndarray] = ()
+    ) -> concurrent.futures.Future:
+        """Pipeline one request; returns a future of ``(env, arrays)``."""
+        with self._lock:
+            if self._sock is None:
+                self._connect()
+            try:
+                mid = self._methods[name]
+            except KeyError:
+                raise RemoteError(
+                    name, "KeyError", f"server has no method {name!r}"
+                ) from None
+            return self._send_locked(mid, env or {}, arrays, name=name)
+
+    def call(
+        self,
+        name: str,
+        env: Optional[dict] = None,
+        arrays: Sequence[np.ndarray] = (),
+        timeout: Optional[float] = None,
+    ) -> CallResult:
+        return self.wait(self.call_async(name, env, arrays), timeout=timeout, name=name)
+
+    def wait(
+        self,
+        fut: concurrent.futures.Future,
+        timeout: Optional[float] = None,
+        name: str = "?",
+    ) -> CallResult:
+        """Resolve a pipelined call's future with the per-call timeout."""
+        try:
+            return fut.result(self.timeout if timeout is None else timeout)
+        except concurrent.futures.TimeoutError:
+            raise CallTimeout(
+                f"call {name!r} to {self.endpoint} exceeded its timeout"
+            ) from None
+
+    def close(self) -> None:
+        self._closed = True
+        self._drop_connection(
+            ConnectionLost(f"client for {self.endpoint} closed"), gen=None
+        )

@@ -1,0 +1,215 @@
+"""Threaded socket RPC server hosting a registered method table.
+
+One :class:`RPCServer` owns one listening socket and one handler thread per
+accepted connection.  A connection's requests are processed sequentially and
+answered in arrival order, which is what makes client-side pipelining safe:
+a client may send any number of requests before reading a response, and the
+response stream matches the request stream one-to-one by request id.
+
+Handlers have the uniform signature ``fn(env, arrays) -> (env, arrays)``
+(returning ``None`` means "empty reply").  Any exception a handler raises is
+serialized back as an ERROR frame carrying the exception type and message —
+the client rethrows it as :class:`~repro.net.framing.RemoteError` — so a
+server-side failure is always a loud, typed client-side failure.
+
+Method ids are assigned at registration time and are *not* part of the
+public contract: clients resolve ``{name: id}`` at connect time through the
+reserved ``METHOD_RESOLVE`` id 0, so the wire stays stable when services
+add methods.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+from .framing import (
+    ERROR,
+    METHOD_RESOLVE,
+    REQUEST,
+    RESPONSE,
+    FrameDecoder,
+    FramingError,
+    encode_frame,
+)
+
+Handler = Callable[[dict, tuple], Optional[Tuple[dict, tuple]]]
+
+
+class MethodTable:
+    """Name → handler registry with server-assigned numeric method ids."""
+
+    def __init__(self) -> None:
+        self._by_id: Dict[int, Tuple[str, Handler]] = {}
+        self._ids: Dict[str, int] = {}
+        self._next_id = METHOD_RESOLVE + 1
+
+    def register(self, name: str, fn: Handler) -> int:
+        if name in self._ids:
+            raise ValueError(f"method {name!r} already registered")
+        mid = self._next_id
+        self._next_id += 1
+        self._by_id[mid] = (name, fn)
+        self._ids[name] = mid
+        return mid
+
+    def names(self) -> Dict[str, int]:
+        return dict(self._ids)
+
+    def lookup(self, method_id: int) -> Tuple[str, Handler]:
+        try:
+            return self._by_id[method_id]
+        except KeyError:
+            raise KeyError(f"unknown method id {method_id}") from None
+
+
+class RPCServer:
+    """Accept-loop + per-connection handler threads over a MethodTable."""
+
+    def __init__(self, table: MethodTable, host: str = "127.0.0.1", port: int = 0):
+        self.table = table
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(128)
+        self._host = host
+        self._port = self._sock.getsockname()[1]
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns_lock = threading.Lock()
+        self._conns: Dict[int, socket.socket] = {}
+        self._next_conn = 0
+        self._stopping = threading.Event()
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def endpoint(self) -> Tuple[str, int]:
+        return (self._host, self._port)
+
+    def start(self) -> "RPCServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"rpc-accept:{self._port}", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Blocking variant for worker processes / the CLI entrypoint."""
+        if self._accept_thread is None:
+            self.start()
+        self._stopping.wait()
+
+    def stop(self) -> None:
+        self._stopping.set()
+        # Waking a blocked accept() is kernel-dependent: close() alone may
+        # leave the syscall (and thus the listening socket) alive because the
+        # in-flight accept holds a reference to the fd.  Shut the listener
+        # down first, then poke it with a throwaway connection so the accept
+        # thread observes _stopping even where shutdown() is a no-op.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            poke = socket.create_connection((self._host, self._port), timeout=1)
+            poke.close()
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+
+    # ---------------------------------------------------------------- inner
+    def _accept_loop(self) -> None:
+        while not self._stopping.is_set():
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:
+                return  # listening socket closed by stop()
+            if self._stopping.is_set():
+                try:
+                    conn.close()  # stop()'s wake-up poke, not a real client
+                except OSError:
+                    pass
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                cid = self._next_conn
+                self._next_conn += 1
+                self._conns[cid] = conn
+            threading.Thread(
+                target=self._serve_conn,
+                args=(cid, conn),
+                name=f"rpc-conn:{self._port}:{cid}",
+                daemon=True,
+            ).start()
+
+    def _serve_conn(self, cid: int, conn: socket.socket) -> None:
+        decoder = FrameDecoder()
+        try:
+            while True:
+                try:
+                    data = conn.recv(1 << 20)
+                except OSError:
+                    return
+                if not data:
+                    return  # peer closed; an incomplete frame is its problem
+                try:
+                    frames = decoder.feed(data)
+                except FramingError:
+                    return  # corrupt stream: drop the connection
+                for frame in frames:
+                    if frame.kind != REQUEST:
+                        continue  # only clients originate the other kinds
+                    try:
+                        reply = self._dispatch(frame)
+                    except Exception:
+                        return  # reply unframeable (e.g. over-size): drop conn
+                    try:
+                        conn.sendall(reply)
+                    except OSError:
+                        return
+        finally:
+            with self._conns_lock:
+                self._conns.pop(cid, None)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _dispatch(self, frame) -> bytes:
+        if frame.method_id == METHOD_RESOLVE:
+            return encode_frame(
+                METHOD_RESOLVE, RESPONSE, frame.request_id,
+                {"methods": self.table.names()},
+            )
+        try:
+            name, fn = self.table.lookup(frame.method_id)
+        except KeyError as e:
+            return encode_frame(
+                frame.method_id, ERROR, frame.request_id,
+                {"method": f"#{frame.method_id}", "etype": "KeyError", "message": str(e)},
+            )
+        try:
+            out = fn(frame.env, frame.arrays)
+            env, arrays = out if out is not None else ({}, ())
+            return encode_frame(frame.method_id, RESPONSE, frame.request_id, env, arrays)
+        except Exception as e:  # noqa: BLE001 - every handler error goes on the wire
+            return encode_frame(
+                frame.method_id, ERROR, frame.request_id,
+                {"method": name, "etype": type(e).__name__, "message": str(e)},
+            )

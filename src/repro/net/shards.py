@@ -1,0 +1,287 @@
+"""PS and provenance shards behind the RPC transport.
+
+Server side, :class:`PSShardService` / :class:`ProvenanceShardService` host
+one :class:`~repro.core.ps.PSShard` / :class:`~repro.core.provenance.\
+ProvenanceShard` each behind a registered method table (``ps.*`` / ``prov.*``
+namespaces — one worker process can host both).  Shards are created lazily by
+a ``*.configure`` call from the federation front-end, so worker processes are
+generic "shard hosts" that need no topology knowledge at spawn time.
+
+Client side, :class:`RemotePSShard` / :class:`RemoteProvenanceShard` satisfy
+the exact method/attribute surface :class:`~repro.core.ps.FederatedPS` and
+:class:`~repro.core.provenance.FederatedProvenanceDB` consume from their
+local counterparts, so ``transport="socket"`` is a drop-in shard swap with
+zero behavioral drift:
+
+  * stats rows travel as raw float64 ndarray bytes (never through text), so
+    the server-side ``merge_moments`` sees bit-identical operands and the
+    federation's PS bit-match guarantee survives the wire;
+  * provenance docs travel as the same JSON objects the local shard would
+    have indexed, and the server assigns/persists the same global ``seq``,
+    so federated query results and shard JSONL files are byte-identical to
+    local mode.
+
+``push_async``/``add_async`` + ``finish`` expose the client's pipelining to
+the federations: a front-end can put one request in flight per touched shard
+and overlap the shards' work across processes instead of serializing on
+round-trips.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.provenance import ProvenanceShard
+from repro.core.ps import PSShard
+
+from .client import RPCClient
+from .framing import ConnectionLost, RPCError
+from .server import MethodTable
+
+
+def _require(shard, what: str):
+    if shard is None:
+        raise RPCError(f"{what} shard not configured (call {what}.configure first)")
+    return shard
+
+
+# --------------------------------------------------------------------- server
+class PSShardService:
+    """Hosts one PSShard; registers the ``ps.*`` method namespace."""
+
+    def __init__(self) -> None:
+        self._shard: Optional[PSShard] = None
+
+    def register(self, table: MethodTable) -> "PSShardService":
+        table.register("ps.configure", self._configure)
+        table.register("ps.push", self._push)
+        table.register("ps.grow", self._grow)
+        table.register("ps.peek_table", self._peek_table)
+        table.register("ps.stats", self._stats)
+        return self
+
+    def _configure(self, env, arrays):
+        # (Re)configure resets the shard: each federation front-end owns the
+        # worker's PS state for its lifetime.
+        self._shard = PSShard(
+            int(env["shard_id"]), int(env["num_shards"]), int(env["num_funcs"])
+        )
+        return {}, ()
+
+    def _push(self, env, arrays):
+        _require(self._shard, "ps").push(np.asarray(arrays[0], dtype=np.float64))
+        return {}, ()
+
+    def _grow(self, env, arrays):
+        _require(self._shard, "ps").grow(int(env["num_rows"]))
+        return {}, ()
+
+    def _peek_table(self, env, arrays):
+        return {}, (_require(self._shard, "ps").peek_table(),)
+
+    def _stats(self, env, arrays):
+        shard = _require(self._shard, "ps")
+        return {
+            "n_pushes": shard.n_pushes,
+            "num_funcs": shard.stats.num_funcs,
+            "shard_id": shard.shard_id,
+            "num_shards": shard.num_shards,
+        }, ()
+
+
+class ProvenanceShardService:
+    """Hosts one ProvenanceShard; registers the ``prov.*`` method namespace."""
+
+    def __init__(self) -> None:
+        self._shard: Optional[ProvenanceShard] = None
+
+    def register(self, table: MethodTable) -> "ProvenanceShardService":
+        table.register("prov.configure", self._configure)
+        table.register("prov.add", self._add)
+        table.register("prov.query", self._query)
+        table.register("prov.take_resumed", self._take_resumed)
+        table.register("prov.dump", self._dump)
+        table.register("prov.len", self._len)
+        table.register("prov.flush", self._flush)
+        table.register("prov.close", self._close)
+        return self
+
+    def _configure(self, env, arrays):
+        if self._shard is not None:
+            self._shard.close()
+        self._shard = ProvenanceShard(
+            path=env.get("path"),
+            append=bool(env.get("append", False)),
+            header=env.get("header"),
+        )
+        return {}, ()
+
+    def _add(self, env, arrays):
+        _require(self._shard, "prov").add(
+            env["doc"], int(env["seq"]), write=bool(env.get("write", True))
+        )
+        return {}, ()
+
+    def _query(self, env, arrays):
+        hits = _require(self._shard, "prov").query(
+            rank=env.get("rank"), fid=env.get("fid"), step=env.get("step"),
+            t0=env.get("t0"), t1=env.get("t1"),
+        )
+        return {"hits": [[seq, doc] for seq, doc in hits]}, ()
+
+    def _take_resumed(self, env, arrays):
+        return {"docs": _require(self._shard, "prov").take_resumed()}, ()
+
+    def _dump(self, env, arrays):
+        shard = _require(self._shard, "prov")
+        return {"hits": [[seq, doc] for seq, doc in zip(shard.seqs, shard.docs)]}, ()
+
+    def _len(self, env, arrays):
+        return {"n": len(_require(self._shard, "prov"))}, ()
+
+    def _flush(self, env, arrays):
+        _require(self._shard, "prov").flush()
+        return {}, ()
+
+    def _close(self, env, arrays):
+        if self._shard is not None:
+            self._shard.close()
+        return {}, ()
+
+
+def build_shard_table(kind: str = "both") -> MethodTable:
+    """Method table for one shard-host worker: ``ps``, ``prov``, or ``both``."""
+    if kind not in ("ps", "prov", "both"):
+        raise ValueError(f"kind must be 'ps', 'prov', or 'both', got {kind!r}")
+    table = MethodTable()
+    if kind in ("ps", "both"):
+        PSShardService().register(table)
+    if kind in ("prov", "both"):
+        ProvenanceShardService().register(table)
+    return table
+
+
+# --------------------------------------------------------------------- client
+class RemotePSShard:
+    """Drop-in for :class:`~repro.core.ps.PSShard` over the RPC transport."""
+
+    def __init__(
+        self,
+        endpoint: Tuple[str, int],
+        shard_id: int,
+        num_shards: int,
+        num_funcs: int,
+        timeout: float = 30.0,
+    ):
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self.endpoint = endpoint
+        self._client = RPCClient(endpoint, timeout=timeout)
+        self._client.call(
+            "ps.configure",
+            {"shard_id": shard_id, "num_shards": num_shards, "num_funcs": num_funcs},
+        )
+
+    def push(self, rows: np.ndarray) -> None:
+        self.finish(self.push_async(rows))
+
+    def push_async(self, rows: np.ndarray) -> concurrent.futures.Future:
+        """Pipeline a push; pair with :meth:`finish`.  Lets the federation
+        overlap the per-shard merges of one delta across worker processes."""
+        return self._client.call_async(
+            "ps.push", arrays=(np.ascontiguousarray(rows, dtype=np.float64),)
+        )
+
+    def finish(self, fut: concurrent.futures.Future) -> None:
+        self._client.wait(fut, name="ps.push")
+
+    def grow(self, num_rows: int) -> None:
+        self._client.call("ps.grow", {"num_rows": int(num_rows)})
+
+    def peek_table(self) -> np.ndarray:
+        _env, arrays = self._client.call("ps.peek_table")
+        return arrays[0]
+
+    @property
+    def n_pushes(self) -> int:
+        return int(self._client.call("ps.stats")[0]["n_pushes"])
+
+    def close(self) -> None:
+        self._client.close()
+
+
+class RemoteProvenanceShard:
+    """Drop-in for :class:`~repro.core.provenance.ProvenanceShard` over RPC.
+
+    The shard's JSONL file lives in the *server* process (``path`` must be
+    meaningful there — same-host workers or a shared filesystem).  ``close``
+    is teardown-path best-effort: it swallows :class:`ConnectionLost` so a
+    federation can always be closed after its workers died, while the data
+    path (``add``/``query``) stays loud.
+    """
+
+    def __init__(
+        self,
+        endpoint: Tuple[str, int],
+        path: Optional[str] = None,
+        append: bool = False,
+        header: Optional[Dict[str, Any]] = None,
+        timeout: float = 30.0,
+    ):
+        self.path = path
+        self.endpoint = endpoint
+        self._client = RPCClient(endpoint, timeout=timeout)
+        self._client.call(
+            "prov.configure", {"path": path, "append": append, "header": header}
+        )
+
+    def add(self, doc: Dict[str, Any], seq: int, write: bool = True) -> None:
+        self.finish(self.add_async(doc, seq, write))
+
+    def add_async(
+        self, doc: Dict[str, Any], seq: int, write: bool = True
+    ) -> concurrent.futures.Future:
+        return self._client.call_async(
+            "prov.add", {"doc": doc, "seq": int(seq), "write": bool(write)}
+        )
+
+    def finish(self, fut: concurrent.futures.Future) -> None:
+        """Resolve any pipelined call (add_async / flush_async) future."""
+        self._client.wait(fut, name="prov")
+
+    def query(
+        self,
+        rank: Optional[int] = None,
+        fid: Optional[int] = None,
+        step: Optional[int] = None,
+        t0: Optional[int] = None,
+        t1: Optional[int] = None,
+    ) -> List[Tuple[int, Dict[str, Any]]]:
+        env, _ = self._client.call(
+            "prov.query", {"rank": rank, "fid": fid, "step": step, "t0": t0, "t1": t1}
+        )
+        return [(seq, doc) for seq, doc in env["hits"]]
+
+    def take_resumed(self) -> List[Dict[str, Any]]:
+        return self._client.call("prov.take_resumed")[0]["docs"]
+
+    def dump(self) -> List[Tuple[int, Dict[str, Any]]]:
+        return [(seq, doc) for seq, doc in self._client.call("prov.dump")[0]["hits"]]
+
+    def flush(self) -> None:
+        self._client.call("prov.flush")
+
+    def flush_async(self) -> concurrent.futures.Future:
+        return self._client.call_async("prov.flush")
+
+    def close(self) -> None:
+        try:
+            self._client.call("prov.close")
+        except ConnectionLost:
+            pass  # workers already gone; nothing left to close remotely
+        self._client.close()
+
+    def __len__(self) -> int:
+        return int(self._client.call("prov.len")[0]["n"])

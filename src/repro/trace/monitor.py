@@ -50,12 +50,24 @@ class ChimbukoMonitor:
         ps_aggregate_every: int = 16,
         provdb_shards: int = 1,
         prov_append: bool = False,
+        ps_transport: str = "local",
+        provdb_transport: str = "local",
+        shard_endpoints: Optional[list] = None,
     ):
         self.registry = registry or FunctionRegistry()
         # PS federation (paper §III-B2): with ps_shards > 1 the stats table
         # is partitioned over fid space across shard instances; clients can
-        # additionally coalesce ps_batch_frames deltas per push.
-        if ps_shards > 1:
+        # additionally coalesce ps_batch_frames deltas per push.  With
+        # transport="socket" the shards live in repro.launch.shard_server
+        # worker processes at shard_endpoints — the paper's separate-process
+        # PS/provenance instances — with unchanged semantics (bit-matched
+        # stats, byte-matched provenance).
+        if ps_transport == "socket":
+            self.ps = FederatedPS(
+                num_funcs, aggregate_every=ps_aggregate_every,
+                transport="socket", endpoints=shard_endpoints,
+            )
+        elif ps_shards > 1:
             self.ps = FederatedPS(
                 num_funcs, num_shards=ps_shards, aggregate_every=ps_aggregate_every
             )
@@ -73,7 +85,13 @@ class ChimbukoMonitor:
         # anomaly docs are partitioned over (rank, fid) space across shard
         # JSONL files + indexes, mirroring the PS federation; prov_append
         # resumes a prior run's store instead of truncating it.
-        if provdb_shards > 1:
+        if provdb_transport == "socket":
+            self.provdb = FederatedProvenanceDB(
+                path=prov_path, registry=self.registry, k_neighbors=k_neighbors,
+                run_info=run_info, append=prov_append,
+                transport="socket", endpoints=shard_endpoints,
+            )
+        elif provdb_shards > 1:
             self.provdb = FederatedProvenanceDB(
                 num_shards=provdb_shards, path=prov_path, registry=self.registry,
                 k_neighbors=k_neighbors, run_info=run_info, append=prov_append,
@@ -161,9 +179,11 @@ class ChimbukoMonitor:
         if isinstance(self.ps, FederatedPS):
             out["ps_shards"] = self.ps.num_shards
             out["ps_shard_pushes"] = self.ps.n_shard_pushes
+            out["ps_transport"] = self.ps.transport
         if isinstance(self.provdb, FederatedProvenanceDB):
             out["provdb_shards"] = self.provdb.num_shards
             out["provdb_shard_docs"] = self.provdb.shard_doc_counts()
+            out["provdb_transport"] = self.provdb.transport
         return out
 
     def flush_ps(self) -> None:
@@ -174,3 +194,5 @@ class ChimbukoMonitor:
     def close(self) -> None:
         self.flush_ps()
         self.provdb.close()
+        if isinstance(self.ps, FederatedPS):
+            self.ps.close()

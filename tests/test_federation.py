@@ -219,6 +219,76 @@ def test_monitor_federated_matches_plain():
     m2.close()
 
 
+# ------------------------------------------------------ socket transport
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_socket_transport_bitmatches_local(num_shards):
+    """transport="socket" must be a pure shard relocation: every snapshot a
+    client sees and the final global table bit-match local mode (stats rows
+    travel as raw float64 bytes; the wire adds zero behavioral drift)."""
+    from repro.launch.shard_server import LocalShardHost
+
+    rng = np.random.default_rng(17 + num_shards)
+    F, F2 = 37, 53
+    local = FederatedPS(F, num_shards=num_shards, aggregate_every=7)
+    with LocalShardHost(num_shards, kind="ps") as host:
+        sock = FederatedPS(
+            F, transport="socket", endpoints=host.endpoints, aggregate_every=7
+        )
+        assert sock.num_shards == num_shards
+        for r, t, d in _random_deltas(rng, n_ranks=4, frames=20, F=F, grow_to=F2):
+            a = local.update_and_fetch(r, t, d)
+            b = sock.update_and_fetch(r, t, d)
+            assert np.array_equal(a, b)  # same staleness, same bits, every push
+        assert local.num_funcs == sock.num_funcs == F2  # growth crossed the wire
+        assert np.array_equal(local.snapshot().table, sock.snapshot().table)
+        assert sock.shard_load() == local.shard_load()
+        sock.close()
+
+
+def test_socket_transport_process_workers():
+    """Same bit-match through real worker *processes* (the GIL-escaping
+    topology benchmarked by bench_net_federation.py)."""
+    from repro.launch.shard_server import ShardServerPool
+
+    rng = np.random.default_rng(23)
+    F = 29
+    local = FederatedPS(F, num_shards=2, aggregate_every=5)
+    with ShardServerPool(2, kind="ps") as pool:
+        sock = FederatedPS(
+            F, transport="socket", endpoints=pool.endpoints, aggregate_every=5
+        )
+        for r, t, d in _random_deltas(rng, n_ranks=3, frames=10, F=F):
+            local.update_and_fetch(r, t, d)
+            sock.update_and_fetch(r, t, d)
+        assert np.array_equal(local.snapshot().table, sock.snapshot().table)
+        sock.close()
+
+
+def test_monitor_socket_transport_matches_local():
+    """ChimbukoMonitor end-to-end on the socket transport == local PS."""
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.launch.shard_server import LocalShardHost
+    from repro.trace.monitor import ChimbukoMonitor
+
+    spec = nwchem_like(anomaly_rate=0.004, roots_per_frame=4)
+    g1 = WorkloadGenerator(spec, n_ranks=2, seed=5)
+    g2 = WorkloadGenerator(spec, n_ranks=2, seed=5)
+    m1 = ChimbukoMonitor(num_funcs=len(g1.registry), registry=g1.registry,
+                         min_samples=30, ps_shards=2)
+    with LocalShardHost(2, kind="ps") as host:
+        m2 = ChimbukoMonitor(num_funcs=len(g2.registry), registry=g2.registry,
+                             min_samples=30, ps_transport="socket",
+                             shard_endpoints=host.endpoints)
+        for s in range(8):
+            for r in range(2):
+                m1.ingest(g1.frame(r, s)[0])
+                m2.ingest(g2.frame(r, s)[0])
+        assert np.array_equal(m1.ps.snapshot().table, m2.ps.snapshot().table)
+        assert m2.summary()["ps_transport"] == "socket"
+        m1.close()
+        m2.close()
+
+
 _FUNC_SHARDED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

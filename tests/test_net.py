@@ -1,0 +1,277 @@
+"""repro.net: framing fuzz, RPC semantics, failure modes, loud degradation."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.ps import FederatedPS
+from repro.core.stats import StatsTable
+from repro.net import (
+    CallTimeout,
+    ConnectionLost,
+    FrameDecoder,
+    FramingError,
+    MethodTable,
+    RemoteError,
+    RPCClient,
+    RPCServer,
+    TruncatedStream,
+    encode_frame,
+)
+from repro.net.framing import REQUEST, HEADER, MAGIC, iter_frames, pack_payload
+from repro.net.shards import PSShardService
+
+
+# ----------------------------------------------------------------- framing
+def _random_frame(rng, max_arrays=3):
+    env = {
+        "s": "x" * int(rng.integers(0, 50)),
+        "i": int(rng.integers(-(2**40), 2**40)),
+        "nest": {"a": [1, 2, {"b": None}]},
+    }
+    arrays = []
+    for _ in range(int(rng.integers(0, max_arrays + 1))):
+        dt = rng.choice(["<f8", "<i8", "<f4", "|i1"])
+        shape = tuple(int(d) for d in rng.integers(0, 5, size=int(rng.integers(1, 3))))
+        arrays.append((rng.random(shape) * 100).astype(np.dtype(dt)))
+    return (
+        int(rng.integers(0, 2**16)),
+        int(rng.integers(0, 3)),
+        int(rng.integers(0, 2**32)),
+        env,
+        arrays,
+    )
+
+
+def _assert_frames_equal(got, want):
+    assert len(got) == len(want)
+    for g, (mid, kind, rid, env, arrays) in zip(got, want):
+        assert (g.method_id, g.kind, g.request_id) == (mid, kind, rid)
+        assert g.env == env
+        assert len(g.arrays) == len(arrays)
+        for a, b in zip(g.arrays, arrays):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert np.array_equal(a, b)
+
+
+def test_framing_roundtrip_fuzz_split_and_coalesced():
+    """Any chunking of the byte stream — 1-byte dribble, random splits, or
+    one giant coalesced read — yields the identical frame sequence."""
+    rng = np.random.default_rng(0)
+    frames = [_random_frame(rng) for _ in range(20)]
+    blob = b"".join(encode_frame(*f[:4], f[4]) for f in frames)
+
+    # coalesced: everything in one feed
+    _assert_frames_equal(FrameDecoder().feed(blob), frames)
+
+    for trial in range(5):
+        cuts = np.sort(rng.integers(0, len(blob), size=int(rng.integers(1, 40))))
+        chunks, prev = [], 0
+        for c in list(cuts) + [len(blob)]:
+            chunks.append(blob[prev:c])
+            prev = int(c)
+        _assert_frames_equal(list(iter_frames(chunks)), frames)
+
+    # pathological: one byte at a time
+    dec = FrameDecoder()
+    got = []
+    for i in range(len(blob)):
+        got.extend(dec.feed(blob[i : i + 1]))
+    dec.close()
+    _assert_frames_equal(got, frames)
+
+
+def test_framing_zero_length_payload():
+    blob = encode_frame(7, REQUEST, 42, {})
+    assert len(blob) == HEADER.size
+    (frame,) = FrameDecoder().feed(blob)
+    assert frame.env == {} and frame.arrays == ()
+    assert frame.method_id == 7 and frame.request_id == 42
+
+
+def test_framing_zero_length_array():
+    (frame,) = FrameDecoder().feed(
+        encode_frame(1, REQUEST, 1, {"k": 1}, [np.zeros((0, 7))])
+    )
+    assert frame.arrays[0].shape == (0, 7)
+
+
+def test_framing_max_size_payload_boundary():
+    env = {"pad": "y" * 100}
+    payload_len = len(pack_payload(env))
+    # exactly at the cap: decodes; one byte over: rejected before buffering
+    (frame,) = FrameDecoder(max_payload=payload_len).feed(
+        encode_frame(1, REQUEST, 1, env)
+    )
+    assert frame.env == env
+    with pytest.raises(FramingError):
+        FrameDecoder(max_payload=payload_len - 1).feed(encode_frame(1, REQUEST, 1, env))
+
+
+def test_framing_corrupt_array_spec_is_framing_error():
+    """A syntactically-valid envelope with a garbage array spec must raise
+    FramingError (anything else escapes the reader threads' stream-error
+    handling and wedges the client silently)."""
+    import json
+
+    from repro.net.framing import ENVLEN
+
+    for spec in (
+        {"dtype": "bogus", "shape": [2]},
+        {"dtype": "<f8", "shape": [-1]},
+        {"dtype": "<f8"},
+        "not-a-dict",
+    ):
+        envelope = json.dumps({"env": {}, "arrays": [spec]}).encode()
+        payload = ENVLEN.pack(len(envelope)) + envelope + b"\0" * 64
+        blob = HEADER.pack(MAGIC, 1, REQUEST, 1, len(payload)) + payload
+        with pytest.raises(FramingError):
+            FrameDecoder().feed(blob)
+    # non-object envelope / env
+    for env_json in (b"[1,2]", b'{"env": 3}'):
+        payload = ENVLEN.pack(len(env_json)) + env_json
+        blob = HEADER.pack(MAGIC, 1, REQUEST, 1, len(payload)) + payload
+        with pytest.raises(FramingError):
+            FrameDecoder().feed(blob)
+
+
+def test_framing_bad_magic_raises():
+    blob = encode_frame(1, REQUEST, 1, {"a": 1})
+    with pytest.raises(FramingError):
+        FrameDecoder().feed(b"XXXX" + blob[len(MAGIC):])
+
+
+def test_framing_truncated_stream_raises_cleanly():
+    rng = np.random.default_rng(3)
+    frames = [_random_frame(rng) for _ in range(3)]
+    blob = b"".join(encode_frame(*f[:4], f[4]) for f in frames)
+    for cut in (len(blob) - 1, len(blob) - HEADER.size // 2, 3):
+        dec = FrameDecoder()
+        dec.feed(blob[:cut])
+        with pytest.raises(TruncatedStream):
+            dec.close()
+    # a clean EOF on a frame boundary is not an error
+    dec = FrameDecoder()
+    dec.feed(blob)
+    dec.close()
+
+
+# ------------------------------------------------------------- rpc semantics
+def _echo_table():
+    table = MethodTable()
+    table.register("echo", lambda env, arrays: (env, arrays))
+    table.register("boom", lambda env, arrays: (_ for _ in ()).throw(ValueError("nope")))
+    table.register("slow", lambda env, arrays: (time.sleep(float(env["s"])), ({}, ()))[1])
+    return table
+
+
+def test_rpc_call_roundtrip_and_pipelining():
+    server = RPCServer(_echo_table()).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        env, arrays = client.call("echo", {"k": [1, "two"]}, [np.arange(6.0).reshape(2, 3)])
+        assert env == {"k": [1, "two"]}
+        assert np.array_equal(arrays[0], np.arange(6.0).reshape(2, 3))
+        # pipelined: all requests in flight before any result is awaited
+        futs = [client.call_async("echo", {"i": i}) for i in range(20)]
+        outs = [client.wait(f)[0]["i"] for f in futs]
+        assert outs == list(range(20))
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_rpc_remote_error_and_unknown_method():
+    server = RPCServer(_echo_table()).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        with pytest.raises(RemoteError) as ei:
+            client.call("boom")
+        assert ei.value.remote_type == "ValueError" and "nope" in str(ei.value)
+        # a failed call must not poison the connection
+        assert client.call("echo", {"ok": 1})[0] == {"ok": 1}
+        with pytest.raises(RemoteError):
+            client.call("no.such.method")
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_rpc_per_call_timeout():
+    server = RPCServer(_echo_table()).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        with pytest.raises(CallTimeout):
+            client.call("slow", {"s": 2.0}, timeout=0.05)
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_rpc_server_kill_then_reconnect():
+    """Kill → typed ConnectionLost; restart on the same port → the same
+    client transparently reconnects on its next call."""
+    server = RPCServer(_echo_table()).start()
+    port = server.endpoint[1]
+    client = RPCClient(server.endpoint, timeout=5, connect_retries=3, retry_delay=0.05)
+    assert client.call("echo", {"a": 1})[0] == {"a": 1}
+    server.stop()
+    with pytest.raises(ConnectionLost):
+        client.call("echo", {"a": 2})
+    server2 = RPCServer(_echo_table(), port=port).start()
+    try:
+        assert client.call("echo", {"a": 3})[0] == {"a": 3}
+    finally:
+        client.close()
+        server2.stop()
+
+
+def test_rpc_inflight_calls_fail_loudly_on_kill():
+    server = RPCServer(_echo_table()).start()
+    client = RPCClient(server.endpoint, timeout=5, connect_retries=1, retry_delay=0.01)
+    fut = client.call_async("slow", {"s": 30.0})
+    time.sleep(0.1)  # let the request reach the handler
+    server.stop()
+    with pytest.raises(ConnectionLost):
+        client.wait(fut, timeout=5)
+    client.close()
+
+
+# -------------------------------------------------- federation degradation
+def test_federated_ps_degrades_loudly_when_workers_die():
+    """A socket federation whose shard workers die must surface a typed
+    transport error from the data path — never silently drop updates."""
+    tables = [MethodTable(), MethodTable()]
+    for t in tables:
+        PSShardService().register(t)
+    servers = [RPCServer(t).start() for t in tables]
+    fed = FederatedPS(
+        8, transport="socket", endpoints=[s.endpoint for s in servers]
+    )
+    d = StatsTable(8).update_batch(np.arange(8), np.ones(8))
+    fed.update_and_fetch(0, 0, d)
+    assert fed.snapshot().table[0, 0] == 1.0
+    for s in servers:
+        s.stop()
+    for shard in fed.shards:  # don't sit through the full reconnect backoff
+        shard._client.connect_retries = 2
+        shard._client.retry_delay = 0.02
+    with pytest.raises(ConnectionLost):
+        for step in range(3):  # first push may ride the half-dead socket
+            fed.update_and_fetch(0, 1 + step, d)
+    fed.close()
+
+
+def test_shard_service_unconfigured_is_typed_error():
+    table = MethodTable()
+    PSShardService().register(table)
+    server = RPCServer(table).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=5)
+        with pytest.raises(RemoteError) as ei:
+            client.call("ps.push", arrays=[np.zeros((1, 7))])
+        assert "not configured" in str(ei.value)
+        client.close()
+    finally:
+        server.stop()

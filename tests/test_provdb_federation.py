@@ -228,6 +228,76 @@ def test_federated_matches_single_store(tmp_path, num_shards):
             )
 
 
+# ------------------------------------------------------ socket transport
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_socket_provdb_matches_local(tmp_path, num_shards):
+    """transport="socket" provenance must be byte-identical to local mode:
+    same docs in the same order from every query axis, and bit-identical
+    shard JSONL files (the docs and their persisted seq survive the wire
+    unchanged)."""
+    import jax  # noqa: F401 — static_provenance's lazy jax import mutates
+    # os.environ (TPU_LIBRARY_PATH); warm it so both stores snapshot the
+    # same env into their run_info headers.
+    from repro.launch.shard_server import LocalShardHost
+
+    registry, stream = _anomaly_stream()
+    local = FederatedProvenanceDB(
+        num_shards=num_shards, path=str(tmp_path / "local.jsonl"),
+        registry=registry, run_info=FIXED_RUN_INFO,
+    )
+    with LocalShardHost(num_shards, kind="prov") as host:
+        sock = FederatedProvenanceDB(
+            path=str(tmp_path / "sock.jsonl"), registry=registry,
+            run_info=FIXED_RUN_INFO, transport="socket", endpoints=host.endpoints,
+        )
+        assert sock.num_shards == num_shards
+        for res, comm in stream:
+            assert local.ingest(res, comm) == sock.ingest(res, comm)
+        assert sock.records == local.records
+        assert sock.shard_doc_counts() == local.shard_doc_counts()
+        doc = local.records[0]
+        rank, fid = doc["rank"], doc["anomaly"]["fid"]
+        t_mid = doc["anomaly"]["entry"]
+        for q in (
+            {}, {"rank": rank}, {"fid": fid}, {"rank": rank, "fid": fid},
+            {"step": doc["step"]}, {"t0": t_mid - 500, "t1": t_mid + 500},
+        ):
+            assert sock.query(**q) == local.query(**q)
+        assert len(sock) == len(local)
+        local.close()
+        sock.close()
+        for pl, ps_ in zip(
+            shard_paths(str(tmp_path / "local.jsonl"), num_shards),
+            shard_paths(str(tmp_path / "sock.jsonl"), num_shards),
+        ):
+            assert open(pl, "rb").read() == open(ps_, "rb").read()
+
+
+def test_socket_provdb_resume_across_transports(tmp_path):
+    """append=True over the socket sees (and re-routes) docs a local-mode
+    run left behind: the transport changes where shards run, not what the
+    path family means."""
+    from repro.launch.shard_server import LocalShardHost
+
+    path = str(tmp_path / "prov.jsonl")
+    frame = _comm_frame()
+    local = FederatedProvenanceDB(num_shards=2, path=path, run_info=FIXED_RUN_INFO)
+    for fid in (1, 0):
+        local.ingest(_result_for(frame, anomaly_fid=fid), frame.comm_events)
+    before = local.records
+    local.close()
+
+    with LocalShardHost(2, kind="prov") as host:
+        sock = FederatedProvenanceDB(
+            path=path, run_info=FIXED_RUN_INFO, append=True,
+            transport="socket", endpoints=host.endpoints,
+        )
+        assert sock.records == before
+        sock.ingest(_result_for(frame, anomaly_fid=2), frame.comm_events)
+        assert len(sock) == 3
+        sock.close()
+
+
 def test_monitor_with_sharded_provdb(tmp_path):
     spec = nwchem_like(anomaly_rate=0.008)
     for f in spec.funcs.values():
