@@ -10,32 +10,41 @@ them side by side on the same stream:
     curve flattens (or inverts: more shards = more routing work, same
     serialized compute).
   * ``socket`` — shards are ``repro.launch.shard_server`` worker processes
-    behind the ``repro.net`` RPC transport.  Pushes are pipelined one
-    request per touched shard, so the per-shard merges run concurrently in
-    the workers and throughput can climb with shard count until the host
-    runs out of cores.
+    behind the ``repro.net`` event-loop RPC transport.  PS pushes and
+    provenance ``add_many`` batches are shipped fire-and-forget on
+    multiplexed connections, so the RPC round-trip leaves the hot path
+    entirely and the per-shard work runs concurrently in the workers.
+  * ``socket_threaded`` — the PR 3 baseline: thread-per-connection server
+    plus ``io_mode="sync"`` federations (per-doc adds, one waited
+    round-trip per update/ingest).  This is the curve the event-loop +
+    multiplexed-client rewrite is measured against.
 
-Measured: PS update throughput (R rank threads pushing (F, 7) deltas),
-provenance ingest throughput (anomaly docs/s, JSONL writes included), and
-provenance query throughput, each at S ∈ shard counts × both transports.
-Every configuration must converge to the same global stats (PS, to float
-associativity under thread interleaving) and to identical docs in identical
-order (provenance, exactly — the federation invariant).
+Measured per configuration: throughput (updates/s, docs/s, queries/s) AND
+p50/p95 per-call latency (one ``update_and_fetch`` / one ``ingest``) —
+throughput alone hides head-of-line blocking, which is exactly what the
+async path removes.  Every configuration must converge to the same global
+stats (PS, to float associativity under thread interleaving) and to
+identical docs in identical order (provenance, exactly — the federation
+invariant).
 
-    PYTHONPATH=src python benchmarks/bench_net_federation.py [--smoke]
+    PYTHONPATH=src python benchmarks/bench_net_federation.py [--smoke] \
+        [--json BENCH_net.json]
 
-The deliverable is the shard-scaling curve un-inverting once shards escape
-the GIL; on small CI hosts the socket curve is capped by core count, so
-``--smoke`` only checks machinery, not scaling.
+Acceptance (full run): socket-mode PS update and provenance ingest
+throughput ≥2× the threaded PR 3 baseline at S ∈ {2, 4}.  ``--json`` dumps
+the row trajectory so future PRs can diff transport throughput.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import platform
 import sys
 import tempfile
+import threading
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,13 +55,23 @@ from repro.core.sim import WorkloadGenerator, nwchem_like
 from repro.core.stats import StatsTable
 from repro.launch.shard_server import ShardServerPool
 
-try:  # one rank-thread driver for every PS bench (run.py imports us as a
-    from benchmarks.bench_ps_sharding import _drive  # package member...
-except ImportError:
-    from bench_ps_sharding import _drive  # ...CI runs us as a script
-
 # Fixed run_info: every store in one comparison writes identical headers.
 RUN_INFO = {"timestamp": 0.0}
+
+# Transport axis: (label, uses socket workers, threaded server + sync io).
+TRANSPORTS = {
+    "local": (False, False),
+    "socket": (True, False),
+    "socket_threaded": (True, True),  # the PR 3 baseline
+}
+
+
+def _pctl(lat_us: List[float]) -> Dict[str, float]:
+    xs = np.asarray(lat_us, np.float64)
+    return {
+        "p50_us": float(np.percentile(xs, 50)) if xs.size else 0.0,
+        "p95_us": float(np.percentile(xs, 95)) if xs.size else 0.0,
+    }
 
 
 # ------------------------------------------------------------------------- PS
@@ -74,13 +93,44 @@ def _make_deltas(n_ranks, frames, num_funcs, working_set, seed=0):
     return out
 
 
+def _drive(ps, deltas) -> Tuple[float, List[float]]:
+    """One thread per rank pushing its deltas; returns (elapsed s, per-call
+    latencies in µs across all ranks).
+
+    Sibling of bench_ps_sharding._drive (same barrier/timing shape) — this
+    variant records per-call latency and drops the BatchedPSClient wrapping;
+    a timing fix in one should be mirrored in the other."""
+    n_ranks = len(deltas)
+    barrier = threading.Barrier(n_ranks + 1)
+    lat: List[List[float]] = [[] for _ in range(n_ranks)]
+
+    def worker(rank: int) -> None:
+        barrier.wait()
+        rec = lat[rank].append
+        for step, d in enumerate(deltas[rank]):
+            c0 = time.perf_counter()
+            ps.update_and_fetch(rank, step, d)
+            rec((time.perf_counter() - c0) * 1e6)
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(n_ranks)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    return dt, [x for per_rank in lat for x in per_rank]
+
+
 def run_ps(
     shard_counts=(1, 2, 4),
-    transports=("local", "socket"),
+    transports=("local", "socket", "socket_threaded"),
     n_ranks: int = 8,
     frames: int = 40,
     num_funcs: int = 4096,
     working_set: int = 512,
+    repeats: int = 3,
 ) -> List[Dict]:
     deltas = _make_deltas(n_ranks, frames, num_funcs, working_set)
     total_updates = n_ranks * frames
@@ -88,27 +138,44 @@ def run_ps(
     reference = None
     for S in shard_counts:
         for transport in transports:
-            pool = None
-            try:
-                if transport == "socket":
-                    pool = ShardServerPool(S, kind="ps")
-                    fed = FederatedPS(
-                        num_funcs, transport="socket", endpoints=pool.endpoints
-                    )
+            is_socket, threaded = TRANSPORTS[transport]
+            # Best-of-N: the workload is deterministic, so run-to-run spread
+            # is scheduler noise — the fastest repeat is the least-noisy
+            # estimate for *every* transport (baseline included).
+            best: Optional[Tuple[float, List[float]]] = None
+            for _rep in range(max(repeats, 1)):
+                pool = None
+                try:
+                    if is_socket:
+                        pool = ShardServerPool(S, kind="ps", threaded=threaded)
+                        fed = FederatedPS(
+                            num_funcs, transport="socket", endpoints=pool.endpoints,
+                            io_mode="sync" if threaded else "async",
+                        )
+                    else:
+                        fed = FederatedPS(num_funcs, num_shards=S)
+                    dt, lat = _drive(fed, deltas)
+                    # The async path returns before its pushes land; the
+                    # drain barrier charges that tail to the measured window
+                    # so the throughput comparison stays honest.
+                    t0 = time.perf_counter()
+                    fed.drain()
+                    dt += time.perf_counter() - t0
+                    snap = fed.snapshot().table
+                    fed.close()
+                finally:
+                    if pool is not None:
+                        pool.stop()
+                if reference is None:
+                    reference = snap
                 else:
-                    fed = FederatedPS(num_funcs, num_shards=S)
-                dt = _drive(fed, deltas, batch_frames=1)
-                snap = fed.snapshot().table
-                fed.close()
-            finally:
-                if pool is not None:
-                    pool.stop()
-            if reference is None:
-                reference = snap
-            else:
-                # Same global stats on every topology and transport (float
-                # associativity only — thread interleaving reorders merges).
-                assert np.allclose(reference, snap, rtol=1e-6, atol=1e-6)
+                    # Same global stats on every topology and transport
+                    # (float associativity only — thread interleaving
+                    # reorders merges).
+                    assert np.allclose(reference, snap, rtol=1e-6, atol=1e-6)
+                if best is None or dt < best[0]:
+                    best = (dt, lat)
+            dt, lat = best
             rows.append(
                 {
                     "config": f"ps_S{S}_{transport}",
@@ -118,6 +185,7 @@ def run_ps(
                     "time_s": dt,
                     "total_updates": total_updates,
                     "updates_per_s": total_updates / dt,
+                    **_pctl(lat),
                 }
             )
     return rows
@@ -146,10 +214,11 @@ def _build_stream(n_ranks: int, steps: int, seed: int = 0):
 
 def run_prov(
     shard_counts=(1, 2, 4),
-    transports=("local", "socket"),
+    transports=("local", "socket", "socket_threaded"),
     n_ranks: int = 8,
     steps: int = 40,
     n_queries: int = 200,
+    repeats: int = 3,
 ) -> List[Dict]:
     registry, stream = _build_stream(n_ranks, steps)
     rows = []
@@ -158,49 +227,60 @@ def run_prov(
     with tempfile.TemporaryDirectory() as td:
         for S in shard_counts:
             for transport in transports:
-                pool = None
-                try:
-                    kw = dict(
-                        path=os.path.join(td, f"prov_S{S}_{transport}.jsonl"),
-                        registry=registry,
-                        run_info=RUN_INFO,
-                    )
-                    if transport == "socket":
-                        pool = ShardServerPool(S, kind="prov")
-                        db = FederatedProvenanceDB(
-                            transport="socket", endpoints=pool.endpoints, **kw
+                is_socket, threaded = TRANSPORTS[transport]
+                best = None  # best-of-N: see run_ps
+                for rep in range(max(repeats, 1)):
+                    pool = None
+                    try:
+                        kw = dict(
+                            path=os.path.join(td, f"prov_S{S}_{transport}_{rep}.jsonl"),
+                            registry=registry,
+                            run_info=RUN_INFO,
                         )
-                    else:
-                        db = FederatedProvenanceDB(num_shards=S, **kw)
-                    t0 = time.perf_counter()
-                    for res, comm in stream:
-                        db.ingest(res, comm)
-                    dt_ingest = time.perf_counter() - t0
-                    docs = db.records
-                    if reference is None:
-                        reference = docs
-                    else:
-                        # Federation invariant: same docs, same order, any
-                        # shard count, either transport.
-                        assert docs == reference
-                    keys = [
-                        (d["rank"], d["anomaly"]["fid"], d["anomaly"]["entry"])
-                        for d in docs
-                    ]
-                    picks = rng.integers(0, len(keys), n_queries)
-                    t0 = time.perf_counter()
-                    for i, p in enumerate(picks):
-                        rank, fid, entry = keys[int(p)]
-                        if i % 2 == 0:
-                            hits = db.query(rank=rank, fid=fid)
+                        if is_socket:
+                            pool = ShardServerPool(S, kind="prov", threaded=threaded)
+                            db = FederatedProvenanceDB(
+                                transport="socket", endpoints=pool.endpoints,
+                                io_mode="sync" if threaded else "async", **kw
+                            )
                         else:
-                            hits = db.query(t0=entry - 1000, t1=entry + 1000)
-                        assert hits
-                    dt_query = time.perf_counter() - t0
-                    db.close()
-                finally:
-                    if pool is not None:
-                        pool.stop()
+                            db = FederatedProvenanceDB(num_shards=S, **kw)
+                        lat = []
+                        t0 = time.perf_counter()
+                        for res, comm in stream:
+                            c0 = time.perf_counter()
+                            db.ingest(res, comm)
+                            lat.append((time.perf_counter() - c0) * 1e6)
+                        db.drain()  # charge the async tail to the ingest window
+                        dt_ingest = time.perf_counter() - t0
+                        docs = db.records
+                        if reference is None:
+                            reference = docs
+                        else:
+                            # Federation invariant: same docs, same order,
+                            # any shard count, either transport.
+                            assert docs == reference
+                        keys = [
+                            (d["rank"], d["anomaly"]["fid"], d["anomaly"]["entry"])
+                            for d in docs
+                        ]
+                        picks = rng.integers(0, len(keys), n_queries)
+                        t0 = time.perf_counter()
+                        for i, p in enumerate(picks):
+                            rank, fid, entry = keys[int(p)]
+                            if i % 2 == 0:
+                                hits = db.query(rank=rank, fid=fid)
+                            else:
+                                hits = db.query(t0=entry - 1000, t1=entry + 1000)
+                            assert hits
+                        dt_query = time.perf_counter() - t0
+                        db.close()
+                    finally:
+                        if pool is not None:
+                            pool.stop()
+                    if best is None or dt_ingest < best[0]:
+                        best = (dt_ingest, lat, dt_query, docs)
+                dt_ingest, lat, dt_query, docs = best
                 rows.append(
                     {
                         "config": f"prov_S{S}_{transport}",
@@ -213,19 +293,31 @@ def run_prov(
                         "docs_per_s": len(docs) / dt_ingest,
                         "query_s": dt_query,
                         "queries_per_s": n_queries / dt_query,
+                        **_pctl(lat),
                     }
                 )
     return rows
 
 
-def _scaling(rows: List[Dict], section: str, transport: str, metric: str) -> float:
-    """Throughput ratio of the largest shard count to S=1 for one curve."""
-    curve = {
+def _curve(rows: List[Dict], section: str, transport: str, metric: str) -> Dict[int, float]:
+    return {
         r["shards"]: r[metric]
         for r in rows
         if r["section"] == section and r["transport"] == transport
     }
+
+
+def _scaling(rows: List[Dict], section: str, transport: str, metric: str) -> float:
+    """Throughput ratio of the largest shard count to S=1 for one curve."""
+    curve = _curve(rows, section, transport, metric)
     return curve[max(curve)] / curve[1]
+
+
+def _speedups(rows: List[Dict], section: str, metric: str) -> Dict[int, float]:
+    """Event-loop async vs PR 3 threaded baseline, per shard count."""
+    new = _curve(rows, section, "socket", metric)
+    base = _curve(rows, section, "socket_threaded", metric)
+    return {S: new[S] / base[S] for S in sorted(new) if S in base}
 
 
 def main(argv=()):
@@ -235,16 +327,27 @@ def main(argv=()):
     ap.add_argument(
         "--smoke",
         action="store_true",
-        help="tiny configuration for CI: exercises both transports end to "
-        "end (spawned workers, pipelined pushes, federated queries) in "
-        "seconds; scaling claims need the full run on a many-core host",
+        help="tiny configuration for CI: exercises all three transports end "
+        "to end (event-loop + threaded servers, batched async pushes, "
+        "federated queries) in seconds; scaling/speedup claims need the "
+        "full run on a many-core host",
+    )
+    ap.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="write the benchmark rows (plus host metadata) as a JSON "
+        "trajectory file, e.g. BENCH_net.json, for cross-PR comparison",
     )
     args = ap.parse_args(list(argv))
     if args.smoke:
         ps_rows = run_ps(
-            shard_counts=(1, 2), n_ranks=4, frames=10, num_funcs=1024, working_set=128
+            shard_counts=(1, 2), n_ranks=4, frames=10, num_funcs=1024,
+            working_set=128, repeats=1,
         )
-        prov_rows = run_prov(shard_counts=(1, 2), n_ranks=4, steps=12, n_queries=40)
+        prov_rows = run_prov(
+            shard_counts=(1, 2), n_ranks=4, steps=12, n_queries=40, repeats=1
+        )
     else:
         ps_rows = run_ps()
         prov_rows = run_prov()
@@ -252,30 +355,58 @@ def main(argv=()):
     for r in ps_rows:
         print(
             f"net_federation/{r['config']},{r['time_s'] * 1e6 / r['total_updates']:.2f},"
-            f"updates_per_s={r['updates_per_s']:.0f}"
+            f"updates_per_s={r['updates_per_s']:.0f};"
+            f"p50_us={r['p50_us']:.1f};p95_us={r['p95_us']:.1f}"
         )
     for r in prov_rows:
         print(
             f"net_federation/{r['config']},{r['time_s'] * 1e6 / max(r['n_docs'], 1):.2f},"
-            f"ingest_docs_per_s={r['docs_per_s']:.0f};queries_per_s={r['queries_per_s']:.0f}"
+            f"ingest_docs_per_s={r['docs_per_s']:.0f};"
+            f"queries_per_s={r['queries_per_s']:.0f};"
+            f"p50_us={r['p50_us']:.1f};p95_us={r['p95_us']:.1f}"
         )
+    speedups = {}
     for section, metric in (("ps", "updates_per_s"), ("prov", "docs_per_s")):
         local = _scaling(rows, section, "local", metric)
         sock = _scaling(rows, section, "socket", metric)
         print(f"net_federation/{section}_scaling_local,,x{local:.2f}")
         print(f"net_federation/{section}_scaling_socket,,x{sock:.2f}")
-    # Acceptance: every configuration converged (asserted in run_*) and the
-    # socket PS curve beats the local one at the top shard count — shards
-    # escaping the GIL is the whole point of the transport.  Smoke runs on
-    # tiny hosts only check convergence.
+        speedups[section] = _speedups(rows, section, metric)
+        for S, x in speedups[section].items():
+            print(f"net_federation/{section}_S{S}_evloop_vs_threaded,,x{x:.2f}")
+    # Acceptance: every configuration converged (asserted in run_*).  Full
+    # runs additionally require the event-loop + multiplexed async client to
+    # at least double the PR 3 threaded baseline at S ∈ {2, 4} — the whole
+    # point of taking the round-trip wait out of the hot path.  Smoke runs
+    # on tiny CI hosts only check the machinery.
     if args.smoke:
         ok = bool(rows)
         print(f"net_federation/acceptance_transport_equivalence,,{'PASS' if ok else 'FAIL'}")
     else:
-        ok = _scaling(rows, "ps", "socket", "updates_per_s") > _scaling(
-            rows, "ps", "local", "updates_per_s"
+        ok = all(
+            speedups[section][S] >= 2.0
+            for section in ("ps", "prov")
+            for S in (2, 4)
+            if S in speedups[section]
         )
-        print(f"net_federation/acceptance_socket_beats_local_scaling,,{'PASS' if ok else 'FAIL'}")
+        print(f"net_federation/acceptance_evloop_2x_threaded,,{'PASS' if ok else 'FAIL'}")
+    if args.json:
+        doc = {
+            "bench": "net_federation",
+            "smoke": bool(args.smoke),
+            "host": {
+                "platform": platform.platform(),
+                "python": sys.version.split()[0],
+                "cpus": os.cpu_count(),
+            },
+            "rows": rows,
+            "speedup_vs_threaded": {
+                k: {str(S): x for S, x in v.items()} for k, v in speedups.items()
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"net_federation/json_written,,{args.json}", file=sys.stderr)
     return rows
 
 

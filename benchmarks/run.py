@@ -12,11 +12,23 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--net-json",
+        metavar="PATH",
+        default=None,
+        help="have the net_federation section also write its rows as a JSON "
+        "trajectory file (e.g. BENCH_net.json) so future PRs can compare "
+        "transport throughput",
+    )
+    args = ap.parse_args(sys.argv[1:] if argv is None else list(argv))
+
     from benchmarks import (
         bench_ad_scaling,
         bench_kernels,
@@ -35,7 +47,10 @@ def main() -> None:
                 bench_net_federation, bench_kernels,
                 bench_roofline):
         try:
-            mod.main()
+            if mod is bench_net_federation and args.net_json:
+                mod.main(["--json", args.net_json])
+            else:
+                mod.main()
         except Exception:
             failures += 1
             print(f"{mod.__name__},0,ERROR", file=sys.stderr)

@@ -20,10 +20,13 @@ Two store topologies, mirroring the PS federation (§III-B2, core/ps.py):
     (global ingest sequence) order — identical docs, identical order to the
     single store fed the same stream.
 
-Both stores index docs by (rank, fid, step) with a sorted entry-time index,
-so point and window queries are posting-list lookups instead of linear scans,
-and both support ``append=True`` resume: reopening an existing JSONL keeps
-the prior run's records (loaded back into the index) instead of truncating.
+Both stores index docs by (rank, fid, step) posting lists, by secondary
+function-name and anomaly-severity posting lists (the viz drill-down axes:
+``query(func=, severity=, min_severity=)``), and by a sorted entry-time
+index, so point, window, and drill-down queries touch only matching
+candidates instead of linear-scanning; both support ``append=True`` resume:
+reopening an existing JSONL keeps the prior run's records (loaded back into
+the index) instead of truncating.
 
 The federation also runs cross-process: ``transport="socket"`` swaps each
 shard for a :mod:`repro.net` remote stub hosted by a
@@ -39,6 +42,7 @@ import json
 import os
 import platform
 import sys
+import threading
 import time
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
@@ -125,6 +129,16 @@ def build_anomaly_doc(
     w = int(np.nonzero(same == idx)[0][0])
     neigh = same[max(0, w - k_neighbors) : w + k_neighbors + 1]
     neighbors = [_record_to_dict(recs[j], registry) for j in neigh if j != idx]
+    # Severity: doublings of the anomalous runtime over the median runtime
+    # of its same-function neighbors, clipped to [0, 10].  Deterministic and
+    # self-contained (no detector state), so local and socket stores derive
+    # the identical value; 0 when there is no baseline to compare against.
+    runtime = float(recs["runtime"][idx])
+    severity = 0
+    if neighbors:
+        base = float(np.median([n["runtime"] for n in neighbors]))
+        if base > 0 and runtime > base:
+            severity = int(np.clip(np.log2(runtime / base), 0, 10))
     comms: List[Dict[str, Any]] = []
     if comm_events is not None and len(comm_events):
         rows = result.ctx.comm_entry_row
@@ -148,6 +162,7 @@ def build_anomaly_doc(
         "type": "anomaly",
         "step": result.step,
         "rank": result.rank,
+        "severity": severity,
         "anomaly": anomaly,
         "call_stack": stack,
         "neighbors": neighbors,
@@ -180,12 +195,29 @@ def _resume_order(docs: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
 class ProvenanceShard:
     """One provenance partition: a JSONL file plus an in-memory query index.
 
-    Docs are indexed by (rank, fid, step) posting lists and by a lazily
-    sorted anomaly-entry-time index, so :meth:`query` touches only matching
-    candidates instead of scanning every doc.  Each doc carries the global
-    ingest sequence number its owner assigned (persisted as ``seq`` in the
-    JSONL), which is what federated query merging orders by and what resume
-    uses to reconstruct cross-shard ingest order.
+    Docs are indexed by (rank, fid, step) posting lists, by secondary
+    function-*name* and anomaly-*severity* posting lists (the viz
+    drill-down axes), and by a lazily sorted anomaly-entry-time index, so
+    :meth:`query` touches only matching candidates instead of scanning
+    every doc.  Each doc carries the global ingest sequence number its
+    owner assigned (persisted as ``seq`` in the JSONL), which is what
+    federated query merging orders by and what resume uses to reconstruct
+    cross-shard ingest order.
+
+    Per-shard seqs are strictly increasing, which makes :meth:`add`
+    idempotent: a doc whose seq the shard already holds is skipped — the
+    transport may re-send a batch whose response was lost to a connection
+    kill, and the retry must neither drop nor duplicate a doc (or a JSONL
+    line).
+
+    Concurrency contract (the RPC shard host runs queries on worker threads
+    concurrent with adds): every structure is append-only, and :meth:`add`
+    appends ``docs``/``seqs`` *before* publishing a position to any posting
+    list — so a reader that found a position sees a fully-formed doc, and a
+    concurrent :meth:`query`/:meth:`dump` returns a consistent prefix of
+    the stream.  Only the lazily-rebuilt entry-time cache is mutated in
+    place; it is guarded by its own lock.  One writer at a time is the
+    caller's job (the RPC service serializes mutations).
     """
 
     def __init__(
@@ -201,10 +233,13 @@ class ProvenanceShard:
         self._by_rank: Dict[int, List[int]] = {}
         self._by_fid: Dict[int, List[int]] = {}
         self._by_step: Dict[int, List[int]] = {}
+        self._by_func: Dict[str, List[int]] = {}
+        self._by_severity: Dict[int, List[int]] = {}
         self._entry: List[int] = []
         self._exit: List[int] = []
         self._order: Optional[np.ndarray] = None  # argsort by entry ts
         self._order_vals: Optional[np.ndarray] = None
+        self._order_lock = threading.Lock()  # guards the lazy cache only
         self._fh: Optional[io.TextIOBase] = None
         self._resumed: List[Dict[str, Any]] = []
         if path:
@@ -226,6 +261,8 @@ class ProvenanceShard:
 
     # ------------------------------------------------------------- mutation
     def add(self, doc: Dict[str, Any], seq: int, write: bool = True) -> None:
+        if self.seqs and seq <= self.seqs[-1]:
+            return  # duplicate delivery (transport batch retry): already applied
         doc["seq"] = seq  # persisted so resume can rebuild cross-shard order
         pos = len(self.docs)
         self.docs.append(doc)
@@ -236,19 +273,27 @@ class ProvenanceShard:
         self._by_rank.setdefault(rank, []).append(pos)
         self._by_fid.setdefault(fid, []).append(pos)
         self._by_step.setdefault(step, []).append(pos)
+        func = a.get("func")
+        if func is not None:
+            self._by_func.setdefault(str(func), []).append(pos)
+        self._by_severity.setdefault(int(doc.get("severity", 0)), []).append(pos)
         self._entry.append(int(a["entry"]))
         self._exit.append(int(a["exit"]))
-        self._order = None
+        with self._order_lock:
+            self._order = None
         if write and self._fh:
             self._fh.write(json.dumps(doc) + "\n")
 
     # -------------------------------------------------------------- queries
     def _time_index(self) -> Tuple[np.ndarray, np.ndarray]:
-        if self._order is None:
-            ent = np.asarray(self._entry, np.int64)
-            self._order = np.argsort(ent, kind="stable")
-            self._order_vals = ent[self._order]
-        return self._order, self._order_vals
+        with self._order_lock:
+            if self._order is None:
+                # Snapshot a stable prefix: adds may append concurrently.
+                n = len(self._entry)
+                ent = np.asarray(self._entry[:n], np.int64)
+                self._order = np.argsort(ent, kind="stable")
+                self._order_vals = ent[self._order]
+            return self._order, self._order_vals
 
     def query(
         self,
@@ -257,22 +302,41 @@ class ProvenanceShard:
         step: Optional[int] = None,
         t0: Optional[int] = None,
         t1: Optional[int] = None,
+        func: Optional[str] = None,
+        severity: Optional[int] = None,
+        min_severity: Optional[int] = None,
     ) -> List[Tuple[int, Dict[str, Any]]]:
-        """Matching (seq, doc) pairs in global ingest-sequence order."""
+        """Matching (seq, doc) pairs in global ingest-sequence order.
+
+        ``func`` (function *name*) and ``severity`` (exact bucket) hit their
+        own posting lists — the viz drill-down axes skip the filter pass
+        over unrelated docs.  ``min_severity`` unions the (≤ 11) severity
+        posting lists at or above the threshold when it is the only
+        selective key, otherwise it rides the filter pass.
+        """
         cands: Iterable[int]
+        lists = [
+            index.get(key(val), [])
+            for val, key, index in (
+                (rank, int, self._by_rank),
+                (fid, int, self._by_fid),
+                (step, int, self._by_step),
+                (func, str, self._by_func),
+                (severity, int, self._by_severity),
+            )
+            if val is not None
+        ]
         if rank is not None and fid is not None and step is not None:
             cands = self._by_key.get((int(rank), int(fid), int(step)), [])
-        elif rank is not None or fid is not None or step is not None:
-            lists = [
-                index.get(int(val), [])
-                for val, index in (
-                    (rank, self._by_rank),
-                    (fid, self._by_fid),
-                    (step, self._by_step),
-                )
-                if val is not None
-            ]
+        elif lists:
             cands = min(lists, key=len)
+        elif min_severity is not None:
+            cands = sorted(
+                pos
+                for sev, posting in self._by_severity.items()
+                if sev >= int(min_severity)
+                for pos in posting
+            )
         elif t0 is not None or t1 is not None:
             order, vals = self._time_index()
             hi = len(order) if t1 is None else int(np.searchsorted(vals, int(t1), side="right"))
@@ -289,6 +353,12 @@ class ProvenanceShard:
             if step is not None and doc["step"] != step:
                 continue
             if fid is not None and a["fid"] != fid:
+                continue
+            if func is not None and a.get("func") != func:
+                continue
+            if severity is not None and doc.get("severity", 0) != severity:
+                continue
+            if min_severity is not None and doc.get("severity", 0) < min_severity:
                 continue
             if t0 is not None and a["exit"] < t0:
                 continue
@@ -368,8 +438,16 @@ class ProvenanceDB:
         step: Optional[int] = None,
         t0: Optional[int] = None,
         t1: Optional[int] = None,
+        func: Optional[str] = None,
+        severity: Optional[int] = None,
+        min_severity: Optional[int] = None,
     ) -> List[Dict[str, Any]]:
-        return [doc for _, doc in self._shard.query(rank, fid, step, t0, t1)]
+        return [
+            doc
+            for _, doc in self._shard.query(
+                rank, fid, step, t0, t1, func, severity, min_severity
+            )
+        ]
 
     def close(self) -> None:
         self._shard.close()
@@ -412,6 +490,16 @@ class FederatedProvenanceDB:
     byte-identical to local mode while ingest/index work escapes this
     process's GIL.  Shard paths are resolved in the *worker*: same-host
     workers or a shared filesystem keep resume semantics intact.
+
+    Socket ingest is *batched and asynchronous*: a frame's docs for one
+    shard coalesce into a single ``prov.add_many`` frame, shipped
+    fire-and-forget together with the flush — ingest pays zero RPC
+    round-trip waits.  Reads stay exact without barriers (the worker
+    executes a connection's requests in order), queries fan out to the
+    owning shards concurrently, and write errors surface loudly on the next
+    operation or on :meth:`close`.  ``io_mode="sync"`` restores the PR 3
+    per-doc wait-per-ingest behavior (one release of rollback, and the
+    measured baseline in ``benchmarks/bench_net_federation.py``).
     """
 
     def __init__(
@@ -424,9 +512,12 @@ class FederatedProvenanceDB:
         append: bool = False,
         transport: str = "local",
         endpoints=None,
+        io_mode: str = "async",
     ):
         if transport not in ("local", "socket"):
             raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
+        if io_mode not in ("async", "sync"):
+            raise ValueError(f"io_mode must be 'async' or 'sync', got {io_mode!r}")
         if transport == "socket":
             if not endpoints:
                 raise ValueError("transport='socket' requires endpoints")
@@ -434,6 +525,7 @@ class FederatedProvenanceDB:
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self.transport = transport
+        self.io_mode = io_mode
         self.num_shards = num_shards
         self.path = path
         self.registry = registry
@@ -466,17 +558,23 @@ class FederatedProvenanceDB:
                 resumed.extend(shard.take_resumed())
             for p in self._extra_resume_paths(owned):
                 resumed.extend(_read_docs(p))
-            inflight = []
+            batches: Dict[int, Tuple[List[Dict[str, Any]], List[int]]] = {}
             for doc in _resume_order(resumed):
                 seq = doc.get("seq", self._seq)
                 s = shard_of(doc["rank"], doc["anomaly"]["fid"], num_shards)
-                shard = self.shards[s]
-                add_async = getattr(shard, "add_async", None)
-                if add_async is not None:  # pipeline: N docs, not N round-trips
-                    inflight.append((shard, add_async(doc, seq, write=False)))
-                else:
-                    shard.add(doc, seq, write=False)
+                batches.setdefault(s, ([], []))
+                batches[s][0].append(doc)
+                batches[s][1].append(seq)
                 self._seq = max(self._seq, seq + 1)
+            inflight = []
+            for s, (docs, seqs) in batches.items():
+                shard = self.shards[s]
+                add_many_async = getattr(shard, "add_many_async", None)
+                if add_many_async is not None:  # one frame per shard, not per doc
+                    inflight.append((shard, add_many_async(docs, seqs, write=False)))
+                else:
+                    for doc, seq in zip(docs, seqs):
+                        shard.add(doc, seq, write=False)
             for shard, fut in inflight:
                 shard.finish(fut)
 
@@ -500,32 +598,44 @@ class FederatedProvenanceDB:
     def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
         """Route every anomaly doc of a frame to its owning shard.
 
-        Remote shards expose ``add_async``: the frame's adds go out pipelined
-        (per-shard order preserved by the connection) and are awaited before
-        the flush, so socket-mode ingest overlaps shard work across worker
-        processes without changing what any shard observes.
+        Socket mode coalesces: the frame's docs for one shard travel as a
+        single ``prov.add_many`` frame, shipped fire-and-forget together
+        with the flush — ingest never waits on a round-trip (per-shard
+        order is preserved by the connection, so every later read observes
+        the batch).  ``io_mode="sync"`` falls back to the PR 3 per-doc
+        pipelined-then-awaited path.
         """
-        touched = set()
+        batches: Dict[int, Tuple[List[Dict[str, Any]], List[int]]] = {}
         n = 0
-        inflight = []
         for idx in result.anomaly_idx:
             idx = int(idx)
             doc = build_anomaly_doc(result, idx, self.registry, self.k, comm_events)
             s = shard_of(doc["rank"], doc["anomaly"]["fid"], self.num_shards)
-            shard = self.shards[s]
-            add_async = getattr(shard, "add_async", None)
-            if add_async is not None:
-                inflight.append((shard, add_async(doc, self._seq)))
-            else:
-                shard.add(doc, self._seq)
+            batches.setdefault(s, ([], []))
+            batches[s][0].append(doc)
+            batches[s][1].append(self._seq)
             self._seq += 1
-            touched.add(s)
             n += 1
+        inflight = []
+        for s, (docs, seqs) in batches.items():
+            shard = self.shards[s]
+            if hasattr(shard, "add_many_nowait"):
+                if self.io_mode == "async":
+                    shard.add_many_nowait(docs, seqs)
+                    shard.flush_nowait()
+                else:
+                    for doc, seq in zip(docs, seqs):
+                        inflight.append((shard, shard.add_async(doc, seq)))
+            else:
+                for doc, seq in zip(docs, seqs):
+                    shard.add(doc, seq)
         for shard, fut in inflight:
             shard.finish(fut)
         flushing = []
-        for s in touched:
+        for s in batches:
             shard = self.shards[s]
+            if hasattr(shard, "add_many_nowait") and self.io_mode == "async":
+                continue  # flush already rode the async batch above
             flush_async = getattr(shard, "flush_async", None)
             if flush_async is not None:
                 flushing.append((shard, flush_async()))
@@ -550,23 +660,48 @@ class FederatedProvenanceDB:
         step: Optional[int] = None,
         t0: Optional[int] = None,
         t1: Optional[int] = None,
+        func: Optional[str] = None,
+        severity: Optional[int] = None,
+        min_severity: Optional[int] = None,
     ) -> List[Dict[str, Any]]:
-        per_shard = [
-            shard.query(rank, fid, step, t0, t1)
-            for shard in self._owning_shards(rank, fid)
-        ]
+        shards = self._owning_shards(rank, fid)
+        if shards and hasattr(shards[0], "query_async"):
+            # Fan out: one in-flight query per owning shard, collected as
+            # they answer — S round-trips overlapped into one.
+            futs = [
+                s.query_async(rank, fid, step, t0, t1, func, severity, min_severity)
+                for s in shards
+            ]
+            per_shard = [s.finish_query(f) for s, f in zip(shards, futs)]
+        else:
+            per_shard = [
+                s.query(rank, fid, step, t0, t1, func, severity, min_severity)
+                for s in shards
+            ]
         return [doc for _, doc in heapq.merge(*per_shard, key=lambda sd: sd[0])]
 
     @property
     def records(self) -> List[Dict[str, Any]]:
         """All docs in global ingest order (the single-store ``records`` view)."""
-        per_shard = [shard.dump() for shard in self.shards]
+        if self.shards and hasattr(self.shards[0], "dump_async"):
+            futs = [s.dump_async() for s in self.shards]
+            per_shard = [s.finish_query(f) for s, f in zip(self.shards, futs)]
+        else:
+            per_shard = [shard.dump() for shard in self.shards]
         return [doc for _, doc in heapq.merge(*per_shard, key=lambda sd: sd[0])]
 
     # ------------------------------------------------------------ lifecycle
     def shard_doc_counts(self) -> List[int]:
         """Per-shard doc counts — the load-balance view of the federation."""
         return [len(shard) for shard in self.shards]
+
+    def drain(self) -> None:
+        """Barrier: wait out every fire-and-forget socket write (surfacing
+        their errors).  No-op for in-process shards."""
+        for shard in self.shards:
+            drain = getattr(shard, "drain", None)
+            if drain is not None:
+                drain()
 
     def flush(self) -> None:
         for shard in self.shards:

@@ -174,6 +174,31 @@ class PSShard:
             self.stats.merge_array(pad_table(rows, self.stats.num_funcs))
             self.n_pushes += 1
 
+    def push_rows(self, idx: np.ndarray, rows: np.ndarray, rows_total: int) -> None:
+        """Merge only the delta's non-empty rows (sparse push), in place.
+
+        ``idx`` are shard-local row indices into a ``rows_total``-row slice.
+        Bit-identical to :meth:`push` of the dense slice: merging an empty
+        row is an exact bitwise no-op (``merge_moments``), so skipping the
+        empty rows changes nothing but the work.  Unlike :meth:`push`, the
+        table is mutated *in place* (no copy-on-write): this is the RPC
+        shard host's hot path, where the only readers are the ``ps.*``
+        handlers, which take :attr:`lock` — use :meth:`peek_table_locked`
+        there, never the lock-free :meth:`peek_table`.
+        """
+        with self.lock:
+            if rows_total > self.stats.num_funcs:
+                self.stats.grow(rows_total)
+            table = self.stats.table
+            table[idx] = merge_moments(table[idx], rows)
+            self.n_pushes += 1
+
+    def peek_table_locked(self) -> np.ndarray:
+        """Copy of the table, consistent under concurrent in-place
+        :meth:`push_rows` mutation (the RPC shard-host read path)."""
+        with self.lock:
+            return self.stats.table.copy()
+
     def grow(self, num_rows: int) -> None:
         with self.lock:
             self.stats.grow(num_rows)
@@ -204,9 +229,16 @@ class FederatedPS(AnomalyFeed):
     (``host:port`` pairs of ``repro.launch.shard_server`` workers), so shard
     merges run in separate processes — same routing, same aggregation, same
     bit-match guarantee (stats rows travel as raw float64 bytes), but the
-    per-shard work escapes this process's GIL.  The per-shard pushes of one
-    delta are pipelined (one request in flight per touched shard) so socket
-    latency is paid once per update, not once per shard.
+    per-shard work escapes this process's GIL.  Socket pushes are
+    *asynchronous*: ``update_and_fetch`` puts one sparse-row frame on the
+    wire per touched shard and returns without waiting — the RPC round-trip
+    leaves the hot path entirely.  Reads (``snapshot``, ``shard_load``)
+    stay exact without barriers because the server executes a connection's
+    requests in order, so a ``peek_table`` response reflects every push
+    that preceded it; write errors surface loudly on the next push or on
+    :meth:`close`.  ``io_mode="sync"`` restores the PR 3
+    wait-per-update behavior (one release of rollback, and the measured
+    baseline in ``benchmarks/bench_net_federation.py``).
     """
 
     def __init__(
@@ -216,10 +248,13 @@ class FederatedPS(AnomalyFeed):
         aggregate_every: int = 16,
         transport: str = "local",
         endpoints=None,
+        io_mode: str = "async",
     ):
         super().__init__()
         if transport not in ("local", "socket"):
             raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
+        if io_mode not in ("async", "sync"):
+            raise ValueError(f"io_mode must be 'async' or 'sync', got {io_mode!r}")
         if transport == "socket":
             if not endpoints:
                 raise ValueError("transport='socket' requires endpoints")
@@ -233,6 +268,7 @@ class FederatedPS(AnomalyFeed):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self.transport = transport
+        self.io_mode = io_mode
         self.num_shards = num_shards
         self._num_funcs = num_funcs
         if transport == "local":
@@ -267,13 +303,29 @@ class FederatedPS(AnomalyFeed):
         """Route a delta's rows to their shards; return the cached aggregate."""
         self._ensure_capacity(delta.shape[0])
         S = self.num_shards
-        # One O(F) pass finds the shards this frame touched (rows with n > 0)
-        # so untouched shards see neither a lock acquisition nor a merge.
-        touched = np.unique(np.nonzero(delta[:, N] > 0)[0] % S) if S > 1 else (0,)
-        if self.transport == "socket":
-            # Pipeline: one push in flight per touched shard, then wait all —
-            # the shard processes merge concurrently instead of serializing
-            # on round-trips.
+        # One O(F) pass finds the non-empty rows (n > 0); the shards those
+        # rows map to are the only ones that see a lock acquisition, merge,
+        # or frame.
+        nz = np.nonzero(delta[:, N] > 0)[0]
+        touched = np.unique(nz % S) if S > 1 else (0,)
+        if self.transport == "socket" and self.io_mode == "async":
+            # Fire-and-forget: one sparse-row frame per touched shard, no
+            # response wait — the merge happens in the worker while this
+            # rank moves on, and the frame rides the client's send buffer
+            # so syscalls amortize over many updates.  Connection FIFO
+            # keeps later reads exact; failed pushes fail the next
+            # operation loudly.  The gather happens here, once over the
+            # global nonzero set, instead of a strided slice + nonzero
+            # pass per shard.
+            for s in touched:
+                shard = self.shards[s]
+                g = nz[nz % S == s] if S > 1 else nz
+                shard.push_sparse_nowait(
+                    g // S, delta[g], shard_rows(delta.shape[0], s, S)
+                )
+        elif self.transport == "socket":
+            # PR 3 behavior: pipeline one push per touched shard, wait all —
+            # kept as the io_mode="sync" fallback / benchmark baseline.
             inflight = []
             for s in touched:
                 shard = self.shards[s]
@@ -309,9 +361,16 @@ class FederatedPS(AnomalyFeed):
         Reads each shard's atomically-published table ref without taking
         shard locks; concurrent pushes land in the *next* refresh.  The
         stitch itself is ``assemble_shards`` — per-row ``merge_moments``
-        against empty rows, bitwise-exact.
+        against empty rows, bitwise-exact.  Remote shards are read with one
+        fanned-out async call per shard (one round-trip total, not S), and
+        each response already reflects every push that preceded it on its
+        connection.
         """
-        tables = [shard.peek_table() for shard in self.shards]
+        if self.transport == "socket":
+            futs = [(shard, shard.peek_table_async()) for shard in self.shards]
+            tables = [shard.finish_peek(fut) for shard, fut in futs]
+        else:
+            tables = [shard.peek_table() for shard in self.shards]
         return assemble_shards(tables, self._num_funcs)
 
     def _refresh_aggregate(self) -> None:
@@ -338,8 +397,17 @@ class FederatedPS(AnomalyFeed):
         """Per-shard push counts — the load-balance view of the federation."""
         return [shard.n_pushes for shard in self.shards]
 
+    def drain(self) -> None:
+        """Barrier: wait out every fire-and-forget socket push (surfacing
+        their errors).  No-op for in-process shards."""
+        for shard in self.shards:
+            drain = getattr(shard, "drain", None)
+            if drain is not None:
+                drain()
+
     def close(self) -> None:
-        """Release transport resources (no-op for in-process shards)."""
+        """Release transport resources (no-op for in-process shards).
+        Remote shards drain their in-flight pushes first."""
         for shard in self.shards:
             close = getattr(shard, "close", None)
             if close is not None:

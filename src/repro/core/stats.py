@@ -136,19 +136,20 @@ def partition_table(table: np.ndarray, num_shards: int) -> list:
 
 def assemble_shards(shards, num_funcs: int) -> np.ndarray:
     """Inverse of :func:`partition_table`: interleave shard blocks back into
-    a global (F, 7) table via :func:`merge_moments` against an empty table.
+    a global (F, 7) table.
 
-    Because shards own disjoint fid rows, each merge folds a shard's rows
-    into still-empty destination rows — so the result is exact (bitwise: an
-    empty-row merge reduces to copying the non-empty operand's moments).
+    Because shards own disjoint fid rows, the conceptual per-shard merge
+    folds each shard's rows into still-empty destination rows — and an
+    empty-row merge is a bitwise copy of the non-empty operand
+    (:func:`merge_moments`).  So the assembly *is* the interleave: a strided
+    assignment per shard, bit-identical to the merge formulation at a
+    fraction of its cost (this runs on every federation aggregate refresh).
     """
     num_shards = len(shards)
     out = empty_table(num_funcs)
     for s, block in enumerate(shards):
-        expand = empty_table(num_funcs)
         rows = min(block.shape[0], shard_rows(num_funcs, s, num_shards))
-        expand[s::num_shards][:rows] = block[:rows]
-        out = merge_moments(out, expand)
+        out[s::num_shards][:rows] = block[:rows]
     return out
 
 

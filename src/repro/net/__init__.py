@@ -2,11 +2,13 @@
 of process (ROADMAP: cross-node PS / cross-process provenance shards).
 
 Layers: :mod:`framing` (length-prefixed binary frames: raw ndarray bytes +
-a compact JSON envelope), :mod:`server` (threaded socket server over a
-registered method table), :mod:`client` (reconnecting, pipelining client
-with per-call timeouts and typed errors), :mod:`shards` (PS / provenance
-shard services and the remote stubs the federations consume).  See
-``docs/net.md`` for the wire format and failure semantics.
+a compact JSON envelope), :mod:`server` (selectors-based event-loop socket
+server over a registered method table, plus the legacy
+:class:`ThreadedRPCServer` fallback), :mod:`client` (reconnecting,
+request-id-multiplexed async client with per-call timeouts and typed
+errors), :mod:`shards` (PS / provenance shard services and the remote
+stubs the federations consume).  See ``docs/net.md`` for the wire format
+and failure semantics.
 """
 from .framing import (
     CallTimeout,
@@ -19,7 +21,7 @@ from .framing import (
     encode_frame,
 )
 from .client import RPCClient
-from .server import MethodTable, RPCServer
+from .server import MethodTable, RPCServer, ThreadedRPCServer
 from .shards import (
     PSShardService,
     ProvenanceShardService,
@@ -39,6 +41,7 @@ __all__ = [
     "RPCClient",
     "RPCError",
     "RPCServer",
+    "ThreadedRPCServer",
     "RemoteError",
     "RemotePSShard",
     "RemoteProvenanceShard",

@@ -1,11 +1,20 @@
-"""Reconnecting, pipelining RPC client for :mod:`repro.net.server`.
+"""Reconnecting, multiplexed async RPC client for :mod:`repro.net.server`.
 
 One :class:`RPCClient` owns one TCP connection plus a reader thread.  Calls
-are pipelined: ``call_async`` assigns a request id, appends the frame to the
-socket under a send lock, and returns a future immediately — many requests
-can be in flight before the first response arrives, and the reader thread
-resolves futures by request id as responses stream back.  ``call`` is the
-synchronous wrapper with a per-call timeout.
+are multiplexed: ``call_async`` assigns a request id, appends the frame to
+the socket under a send lock, and returns a future immediately — an
+*unlimited* number of requests can be in flight before the first response
+arrives, and the reader thread resolves futures by request id as responses
+stream back (the server answers a connection's requests in execution order,
+but correlation is by id, never by position).  ``call`` is the synchronous
+wrapper with a per-call timeout.
+
+Because correlation is by request id, many logical streams can share one
+connection: :meth:`RPCClient.shared` hands out one ref-counted client per
+endpoint, so e.g. a PS shard stub and a provenance shard stub talking to
+the same worker multiplex over a single socket.  Request ids wrap at 2³²
+and skip ids still in flight, so arbitrarily long-lived connections never
+collide a new call with a slow old one.
 
 Failure semantics are typed and loud (the federation must degrade visibly,
 never silently):
@@ -64,7 +73,37 @@ def _shutdown_close(sock: socket.socket) -> None:
 
 
 class RPCClient:
-    """One connection to one RPC server; thread-safe, pipelined, reconnecting."""
+    """One connection to one RPC server; thread-safe, multiplexed, reconnecting."""
+
+    _shared_lock = threading.Lock()
+    _shared: Dict[Tuple[str, int], "RPCClient"] = {}
+
+    @classmethod
+    def shared(cls, endpoint: Tuple[str, int], timeout: float = 30.0, **kw) -> "RPCClient":
+        """Ref-counted client shared per endpoint.
+
+        Multiple stubs (PS + provenance shards on one worker, several
+        federations in one process) multiplex their calls over a single
+        connection; ``close()`` disconnects only when the last user leaves.
+
+        Connection parameters belong to the *first* creator: a later caller
+        joins the existing client, its ``**kw`` (connect_retries, ...) are
+        ignored, and the shared default timeout unifies on the longest
+        requested — per-call deadlines still exist via ``call(...,
+        timeout=)``.  Callers needing different dial behavior should
+        construct an exclusive ``RPCClient`` instead.
+        """
+        key = (endpoint[0], int(endpoint[1]))
+        with cls._shared_lock:
+            client = cls._shared.get(key)
+            if client is not None and not client._closed:
+                client._refs += 1
+                client.timeout = max(client.timeout, timeout)
+                return client
+            client = cls(endpoint, timeout=timeout, **kw)
+            client._refs = 1
+            cls._shared[key] = client
+            return client
 
     def __init__(
         self,
@@ -84,6 +123,13 @@ class RPCClient:
         self._pending_lock = threading.Lock()
         self._pending: Dict[int, Tuple[int, str, concurrent.futures.Future]] = {}
         self._next_rid = 1
+        self._refs: Optional[int] = None  # set by shared(); None = exclusive
+        # Send-side coalescing for fire-and-forget traffic: buffered frames
+        # accumulate here and go out in one sendall once the buffer crosses
+        # ``sendbuf_max`` bytes — or immediately before any unbuffered send,
+        # so the wire order always equals the call order.
+        self._sendbuf = bytearray()
+        self.sendbuf_max = 256 << 10
         self._closed = False
         with self._lock:
             self._connect()
@@ -131,23 +177,49 @@ class RPCClient:
         }
         self._gen += 1
         self._sock = sock
+        # Frames buffered for the dead connection died with it (their
+        # futures were failed by generation); never replay them here.
+        self._sendbuf.clear()
         threading.Thread(
             target=self._read_loop, args=(sock, self._gen), daemon=True,
             name=f"rpc-reader:{self.endpoint[1]}",
         ).start()
 
     def _send_locked(
-        self, method_id: int, env: dict, arrays: Sequence[np.ndarray], name: str
+        self,
+        method_id: int,
+        env: dict,
+        arrays: Sequence[np.ndarray],
+        name: str,
+        buffered: bool = False,
     ) -> concurrent.futures.Future:
-        """Frame + send one request; caller holds ``_lock``."""
-        rid = self._next_rid
-        self._next_rid = (self._next_rid + 1) % (1 << 32) or 1
+        """Frame + send (or buffer) one request; caller holds ``_lock``."""
         fut: concurrent.futures.Future = concurrent.futures.Future()
+        fut._rpc_method = name  # lets wait() name the call in CallTimeout
         with self._pending_lock:
+            # Request ids live in [1, 2³²-1] (0 is the handshake) and wrap.
+            # Skip ids still in flight: after 2³² calls on one connection a
+            # naive wrap would hand a slow old call's id to a new call and
+            # cross their responses.
+            rid = self._next_rid
+            while rid in self._pending:
+                rid = rid % 0xFFFFFFFF + 1
+            self._next_rid = rid % 0xFFFFFFFF + 1
             self._pending[rid] = (self._gen, name, fut)
+        frame = encode_frame(method_id, REQUEST, rid, env, arrays)
         try:
             assert self._sock is not None
-            self._sock.sendall(encode_frame(method_id, REQUEST, rid, env, arrays))
+            if buffered:
+                # Fire-and-forget coalescing: syscalls are the socket-mode
+                # overhead, so small frames ride together.  Order vs
+                # unbuffered sends is preserved below.
+                self._sendbuf += frame
+                if len(self._sendbuf) >= self.sendbuf_max:
+                    self._flush_sends_locked()
+            else:
+                if self._sendbuf:
+                    self._flush_sends_locked()
+                self._sock.sendall(frame)
         except OSError as e:
             # Inline cleanup — we already hold _lock, so no _drop_connection
             # here.  The reader thread will fail this gen's other in-flight
@@ -158,6 +230,23 @@ class RPCClient:
             self._sock = None
             raise ConnectionLost(f"send to {self.endpoint} failed: {e}") from e
         return fut
+
+    def _flush_sends_locked(self) -> None:
+        buf, self._sendbuf = self._sendbuf, bytearray()
+        self._sock.sendall(buf)
+
+    def flush_sends(self) -> None:
+        """Put every buffered fire-and-forget frame on the wire."""
+        with self._lock:
+            if self._sendbuf and self._sock is not None:
+                try:
+                    self._flush_sends_locked()
+                except OSError as e:
+                    _shutdown_close(self._sock)
+                    self._sock = None
+                    raise ConnectionLost(
+                        f"send to {self.endpoint} failed: {e}"
+                    ) from e
 
     def _read_loop(self, sock: socket.socket, gen: int) -> None:
         decoder = FrameDecoder()
@@ -216,9 +305,19 @@ class RPCClient:
 
     # ----------------------------------------------------------------- calls
     def call_async(
-        self, name: str, env: Optional[dict] = None, arrays: Sequence[np.ndarray] = ()
+        self,
+        name: str,
+        env: Optional[dict] = None,
+        arrays: Sequence[np.ndarray] = (),
+        buffered: bool = False,
     ) -> concurrent.futures.Future:
-        """Pipeline one request; returns a future of ``(env, arrays)``."""
+        """Pipeline one request; returns a future of ``(env, arrays)``.
+
+        ``buffered=True`` coalesces the frame with other buffered sends
+        (fire-and-forget hot path); it reaches the wire when the buffer
+        fills, before the next unbuffered send, or on :meth:`flush_sends` —
+        callers waiting such a future should flush first (``wait`` does).
+        """
         with self._lock:
             if self._sock is None:
                 self._connect()
@@ -228,7 +327,7 @@ class RPCClient:
                 raise RemoteError(
                     name, "KeyError", f"server has no method {name!r}"
                 ) from None
-            return self._send_locked(mid, env or {}, arrays, name=name)
+            return self._send_locked(mid, env or {}, arrays, name=name, buffered=buffered)
 
     def call(
         self,
@@ -246,6 +345,9 @@ class RPCClient:
         name: str = "?",
     ) -> CallResult:
         """Resolve a pipelined call's future with the per-call timeout."""
+        name = getattr(fut, "_rpc_method", name)  # always the method *name*
+        if not fut.done() and self._sendbuf:
+            self.flush_sends()  # the awaited frame may still be buffered
         try:
             return fut.result(self.timeout if timeout is None else timeout)
         except concurrent.futures.TimeoutError:
@@ -254,6 +356,13 @@ class RPCClient:
             ) from None
 
     def close(self) -> None:
+        if self._refs is not None:
+            with RPCClient._shared_lock:
+                self._refs -= 1
+                if self._refs > 0:
+                    return  # other stubs still multiplex over this connection
+                if RPCClient._shared.get(self.endpoint) is self:
+                    del RPCClient._shared[self.endpoint]
         self._closed = True
         self._drop_connection(
             ConnectionLost(f"client for {self.endpoint} closed"), gen=None

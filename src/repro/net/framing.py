@@ -3,8 +3,10 @@
 One frame is one request or one response:
 
     header   ``!4s H H I Q`` — magic ``b"RPN1"``, method id (u16), kind
-             (u16: REQUEST / RESPONSE / ERROR), request id (u32, the client's
-             pipelining correlation token), payload length (u64)
+             (u16: REQUEST / RESPONSE / ERROR), request id (u32, the
+             client's multiplexing correlation token — responses are
+             matched by id, so any number of logical calls share one
+             connection), payload length (u64)
     payload  ``!I`` envelope length, a compact JSON envelope, then the raw
              bytes of each ndarray the envelope describes, concatenated in
              order.  A zero-length payload means "empty envelope, no arrays".

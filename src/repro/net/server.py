@@ -1,10 +1,32 @@
-"""Threaded socket RPC server hosting a registered method table.
+"""Socket RPC servers hosting a registered method table.
 
-One :class:`RPCServer` owns one listening socket and one handler thread per
-accepted connection.  A connection's requests are processed sequentially and
-answered in arrival order, which is what makes client-side pipelining safe:
-a client may send any number of requests before reading a response, and the
-response stream matches the request stream one-to-one by request id.
+Two implementations share one wire contract (``repro.net.framing``) and one
+:class:`MethodTable`:
+
+  * :class:`RPCServer` — the default **event-loop server**: one
+    selectors-based IO thread owns the listening socket and every
+    connection.  Sockets are non-blocking; each connection carries an
+    incremental :class:`~repro.net.framing.FrameDecoder` on the inbound
+    side and a queue of partially-written responses on the outbound side,
+    so thousands of connections cost file descriptors, not threads.
+    Handlers registered ``heavy=True`` (bulk queries, table dumps) are
+    offloaded to a small daemon worker pool; everything else — the
+    ``ps.push`` / ``prov.add_many`` hot path — runs inline on the loop with
+    zero thread handoffs.  Outbound queues have a high/low-watermark: a
+    connection whose peer stops reading is unsubscribed from READ until its
+    queue drains (backpressure), so one slow consumer can neither wedge the
+    loop nor balloon server memory.
+  * :class:`ThreadedRPCServer` — the previous thread-per-connection server,
+    kept for one release as a fallback (``repro.launch.shard_server
+    --threaded``) and as the benchmark baseline in
+    ``benchmarks/bench_net_federation.py``.
+
+Both servers preserve the ordering contract multiplexed clients rely on:
+requests of one connection are *executed* strictly in arrival order (a
+heavy handler blocks later requests of its own connection only), so a
+pipelined read observes every write that preceded it on the same
+connection.  Responses carry the request id, so clients correlate them even
+though many logical calls share the connection.
 
 Handlers have the uniform signature ``fn(env, arrays) -> (env, arrays)``
 (returning ``None`` means "empty reply").  Any exception a handler raises is
@@ -19,15 +41,19 @@ add methods.
 """
 from __future__ import annotations
 
+import collections
+import queue
+import selectors
 import socket
 import threading
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from .framing import (
     ERROR,
     METHOD_RESOLVE,
     REQUEST,
     RESPONSE,
+    Frame,
     FrameDecoder,
     FramingError,
     encode_frame,
@@ -37,34 +63,431 @@ Handler = Callable[[dict, tuple], Optional[Tuple[dict, tuple]]]
 
 
 class MethodTable:
-    """Name → handler registry with server-assigned numeric method ids."""
+    """Name → handler registry with server-assigned numeric method ids.
+
+    ``heavy=True`` marks a handler as too expensive for the event loop's IO
+    thread (bulk queries, full-table serialization): the event-loop server
+    runs it on a worker thread while the loop keeps serving other
+    connections.  Per-connection request order is preserved either way.
+    """
 
     def __init__(self) -> None:
-        self._by_id: Dict[int, Tuple[str, Handler]] = {}
+        self._by_id: Dict[int, Tuple[str, Handler, bool]] = {}
         self._ids: Dict[str, int] = {}
         self._next_id = METHOD_RESOLVE + 1
 
-    def register(self, name: str, fn: Handler) -> int:
+    def register(self, name: str, fn: Handler, heavy: bool = False) -> int:
         if name in self._ids:
             raise ValueError(f"method {name!r} already registered")
         mid = self._next_id
         self._next_id += 1
-        self._by_id[mid] = (name, fn)
+        self._by_id[mid] = (name, fn, heavy)
         self._ids[name] = mid
         return mid
 
     def names(self) -> Dict[str, int]:
         return dict(self._ids)
 
-    def lookup(self, method_id: int) -> Tuple[str, Handler]:
+    def lookup(self, method_id: int) -> Tuple[str, Handler, bool]:
         try:
             return self._by_id[method_id]
         except KeyError:
             raise KeyError(f"unknown method id {method_id}") from None
 
 
+def _run_method(name: str, fn: Handler, frame: Frame) -> Optional[bytes]:
+    """Execute one handler; return the reply frame bytes.
+
+    ``None`` means the reply itself could not be framed (e.g. over-size
+    payload) — the caller must drop the connection, because skipping a
+    response would desynchronize the client's request-id bookkeeping.
+    """
+    try:
+        out = fn(frame.env, frame.arrays)
+        env, arrays = out if out is not None else ({}, ())
+        return encode_frame(frame.method_id, RESPONSE, frame.request_id, env, arrays)
+    except Exception as e:  # noqa: BLE001 - every handler error goes on the wire
+        try:
+            return encode_frame(
+                frame.method_id, ERROR, frame.request_id,
+                {"method": name, "etype": type(e).__name__, "message": str(e)},
+            )
+        except Exception:
+            return None
+
+
+def _dispatch_light(table: MethodTable, frame: Frame):
+    """Resolve one request frame without running it.
+
+    Returns either ready reply ``bytes`` (resolve/unknown-method) or the
+    ``(name, fn, heavy)`` triple to execute.
+    """
+    if frame.method_id == METHOD_RESOLVE:
+        return encode_frame(
+            METHOD_RESOLVE, RESPONSE, frame.request_id, {"methods": table.names()}
+        )
+    try:
+        return table.lookup(frame.method_id)
+    except KeyError as e:
+        return encode_frame(
+            frame.method_id, ERROR, frame.request_id,
+            {"method": f"#{frame.method_id}", "etype": "KeyError", "message": str(e)},
+        )
+
+
+class _Conn:
+    """Per-connection state owned by the event loop thread."""
+
+    __slots__ = (
+        "sock", "fd", "decoder", "outq", "out_bytes", "pending", "busy",
+        "paused", "closed", "events",
+    )
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.fd = sock.fileno()
+        self.decoder = FrameDecoder()
+        self.outq: Deque[memoryview] = collections.deque()
+        self.out_bytes = 0
+        self.pending: Deque[Frame] = collections.deque()
+        self.busy = False  # a heavy handler for this conn is on a worker
+        self.paused = False  # READ unsubscribed: outbound queue over high water
+        self.closed = False
+        self.events = selectors.EVENT_READ
+
+
 class RPCServer:
-    """Accept-loop + per-connection handler threads over a MethodTable."""
+    """Selectors-based event-loop RPC server (the default).
+
+    One IO thread multiplexes the listener and every connection.  Light
+    handlers run inline on the loop; ``heavy=True`` handlers run on a small
+    pool of daemon worker threads, with strict per-connection request order
+    preserved (a connection's later requests wait for its in-flight heavy
+    handler; other connections don't).
+
+    ``high_water``/``low_water`` bound the per-connection outbound queue: a
+    connection whose peer reads slower than it requests stops being *read*
+    once ``high_water`` bytes of responses are queued, and resumes below
+    ``low_water`` — the event-loop version of TCP backpressure, end to end.
+    """
+
+    def __init__(
+        self,
+        table: MethodTable,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        workers: int = 2,
+        high_water: int = 8 << 20,
+        low_water: int = 1 << 20,
+        pending_max: int = 1024,
+    ):
+        self.table = table
+        self._workers = max(int(workers), 1)
+        self._high_water = int(high_water)
+        self._low_water = min(int(low_water), int(high_water))
+        self._pending_max = max(int(pending_max), 1)
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(128)
+        self._sock.setblocking(False)
+        self._host = host
+        self._port = self._sock.getsockname()[1]
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._sock, selectors.EVENT_READ, "accept")
+        # Self-pipe: wakes the loop for stop() and worker completions.
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._wake_w.setblocking(False)
+        self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+        self._conns: Dict[int, _Conn] = {}
+        self._completions: Deque[Tuple[_Conn, Optional[bytes]]] = collections.deque()
+        self._jobs: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._worker_threads: List[threading.Thread] = []
+        self._loop_thread: Optional[threading.Thread] = None
+        self._stopping = threading.Event()
+        self.backpressure_pauses = 0  # observability: slow-reader pauses taken
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def endpoint(self) -> Tuple[str, int]:
+        return (self._host, self._port)
+
+    def start(self) -> "RPCServer":
+        self._loop_thread = threading.Thread(
+            target=self._loop, name=f"rpc-loop:{self._port}", daemon=True
+        )
+        self._loop_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Blocking variant for worker processes / the CLI entrypoint."""
+        if self._loop_thread is None:
+            self.start()
+        self._stopping.wait()
+
+    def stop(self) -> None:
+        self._stopping.set()
+        self._wake()
+        if self._loop_thread is not None:
+            self._loop_thread.join(timeout=5)
+        # Normally the loop thread tore everything down on exit.  If it is
+        # wedged (a light handler blocking the loop), force-close the
+        # sockets from here so clients observe ConnectionLost instead of
+        # hanging; the daemon loop thread dies with the process.
+        if self._loop_thread is not None and self._loop_thread.is_alive():
+            for conn in list(self._conns.values()):
+                self._force_close(conn.sock)
+            self._force_close(self._sock)
+        for _ in self._worker_threads:
+            self._jobs.put(None)  # wake idle workers so they can exit
+
+    @staticmethod
+    def _force_close(sock: socket.socket) -> None:
+        try:
+            sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def _wake(self) -> None:
+        try:
+            self._wake_w.send(b"\0")
+        except (BlockingIOError, OSError):
+            pass  # a wake is already pending, or we are shutting down
+
+    # ------------------------------------------------------------- the loop
+    def _loop(self) -> None:
+        try:
+            while not self._stopping.is_set():
+                for key, _mask in self._sel.select(timeout=1.0):
+                    if key.data == "accept":
+                        self._accept()
+                    elif key.data == "wake":
+                        try:
+                            while self._wake_r.recv(4096):
+                                pass
+                        except (BlockingIOError, OSError):
+                            pass
+                    else:
+                        self._service(key.data, _mask)
+                self._drain_completions()
+        finally:
+            for conn in list(self._conns.values()):
+                self._close_conn(conn)
+            try:
+                self._sel.unregister(self._sock)
+            except (KeyError, ValueError):
+                pass
+            self._force_close(self._sock)
+            self._force_close(self._wake_r)
+            self._force_close(self._wake_w)
+            try:
+                self._sel.close()
+            except OSError:
+                pass
+
+    def _accept(self) -> None:
+        while True:
+            try:
+                sock, _addr = self._sock.accept()
+            except (BlockingIOError, OSError):
+                return
+            sock.setblocking(False)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _Conn(sock)
+            self._conns[conn.fd] = conn
+            self._sel.register(sock, selectors.EVENT_READ, conn)
+
+    def _service(self, conn: _Conn, mask: int) -> None:
+        if conn.closed:
+            return
+        if mask & selectors.EVENT_WRITE:
+            self._flush_out(conn)
+        if conn.closed or not (mask & selectors.EVENT_READ):
+            return
+        try:
+            data = conn.sock.recv(1 << 20)
+        except BlockingIOError:
+            return
+        except OSError:
+            self._close_conn(conn)
+            return
+        if not data:
+            self._close_conn(conn)  # peer closed; a partial frame is its problem
+            return
+        try:
+            conn.pending.extend(conn.decoder.feed(data))
+        except FramingError:
+            self._close_conn(conn)  # corrupt stream: drop the connection
+            return
+        self._drain_pending(conn)
+
+    def _drain_pending(self, conn: _Conn) -> None:
+        """Execute queued requests in arrival order until one offloads.
+
+        Replies are queued and flushed once at the end: requests that
+        arrived coalesced (a client's send buffer) answer in one syscall.
+        """
+        while conn.pending and not conn.busy and not conn.closed:
+            frame = conn.pending.popleft()
+            if frame.kind != REQUEST:
+                continue  # only clients originate the other kinds
+            resolved = _dispatch_light(self.table, frame)
+            if isinstance(resolved, bytes):
+                self._send(conn, resolved, flush=False)
+                continue
+            name, fn, heavy = resolved
+            if heavy:
+                conn.busy = True
+                self._submit(conn, name, fn, frame)
+            else:
+                reply = _run_method(name, fn, frame)
+                if reply is None:
+                    self._close_conn(conn)  # unframeable reply: drop conn
+                    return
+                self._send(conn, reply, flush=False)
+        if not conn.closed:
+            if conn.outq:
+                self._flush_out(conn)  # one syscall for the whole batch
+            else:
+                self._update_events(conn)  # may resume a pending-full pause
+
+    # -------------------------------------------------------- worker offload
+    def _submit(self, conn: _Conn, name: str, fn: Handler, frame: Frame) -> None:
+        if len(self._worker_threads) < self._workers:
+            t = threading.Thread(
+                target=self._worker_main,
+                name=f"rpc-worker:{self._port}:{len(self._worker_threads)}",
+                daemon=True,
+            )
+            t.start()
+            self._worker_threads.append(t)
+        self._jobs.put((conn, name, fn, frame))
+
+    def _worker_main(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            conn, name, fn, frame = job
+            reply = _run_method(name, fn, frame)
+            self._completions.append((conn, reply))
+            self._wake()
+
+    def _drain_completions(self) -> None:
+        while self._completions:
+            conn, reply = self._completions.popleft()
+            conn.busy = False
+            if conn.closed:
+                continue  # connection died while the handler ran
+            if reply is None:
+                self._close_conn(conn)
+                continue
+            self._send(conn, reply)
+            self._drain_pending(conn)
+
+    # --------------------------------------------------------------- writes
+    def _send(self, conn: _Conn, data: bytes, flush: bool = True) -> None:
+        if conn.closed:
+            return
+        conn.outq.append(memoryview(data))
+        conn.out_bytes += len(data)
+        if flush:
+            # Opportunistic immediate write: the common case (small reply,
+            # empty socket buffer) completes without an extra poll round.
+            self._flush_out(conn)
+        else:
+            self._update_events(conn)
+
+    def _flush_out(self, conn: _Conn) -> None:
+        while conn.outq:
+            if len(conn.outq) > 1 and len(conn.outq[0]) < (32 << 10):
+                # Coalesce queued small replies into one send() — the
+                # syscall, not the copy, is the per-frame cost that made
+                # thread-per-connection mode slow.
+                chunk = bytearray()
+                while (
+                    conn.outq
+                    and len(chunk) < (128 << 10)
+                    and len(conn.outq[0]) < (32 << 10)  # never copy big frames
+                ):
+                    chunk += conn.outq.popleft()
+                conn.outq.appendleft(memoryview(bytes(chunk)))
+            head = conn.outq[0]
+            try:
+                n = conn.sock.send(head)
+            except BlockingIOError:
+                break
+            except OSError:
+                self._close_conn(conn)
+                return
+            conn.out_bytes -= n
+            if n == len(head):
+                conn.outq.popleft()
+            else:
+                conn.outq[0] = head[n:]
+                break  # kernel buffer full; wait for EVENT_WRITE
+        self._update_events(conn)
+
+    def _update_events(self, conn: _Conn) -> None:
+        """Recompute the selector interest set: READ unless backpressured,
+        WRITE while responses are queued."""
+        if conn.closed:
+            return
+        if not conn.paused and conn.out_bytes > self._high_water:
+            conn.paused = True
+            self.backpressure_pauses += 1
+        elif conn.paused and conn.out_bytes <= self._low_water:
+            conn.paused = False
+        events = selectors.EVENT_WRITE if conn.outq else 0
+        # Inbound backpressure: requests buffered behind an in-flight heavy
+        # handler are also bounded — stop reading past pending_max frames
+        # (resumed by _drain_pending once the backlog shrinks).
+        if not conn.paused and len(conn.pending) < self._pending_max:
+            events |= selectors.EVENT_READ
+        if events != conn.events:
+            # events == 0 (fully backpressured, nothing to write) must leave
+            # the selector entirely: a zero mask is invalid, and a WRITE
+            # placeholder would busy-spin on an always-writable socket.
+            try:
+                if events == 0:
+                    self._sel.unregister(conn.sock)
+                elif conn.events == 0:
+                    self._sel.register(conn.sock, events, conn)
+                else:
+                    self._sel.modify(conn.sock, events, conn)
+                conn.events = events
+            except (KeyError, ValueError, OSError):
+                self._close_conn(conn)
+
+    def _close_conn(self, conn: _Conn) -> None:
+        if conn.closed:
+            return
+        conn.closed = True
+        self._conns.pop(conn.fd, None)
+        try:
+            self._sel.unregister(conn.sock)
+        except (KeyError, ValueError, OSError):
+            pass
+        self._force_close(conn.sock)
+        conn.outq.clear()
+        conn.pending.clear()
+        conn.out_bytes = 0
+
+
+class ThreadedRPCServer:
+    """Thread-per-connection fallback (the pre-event-loop server).
+
+    Kept for one release behind ``repro.launch.shard_server --threaded`` and
+    as the measured baseline in ``benchmarks/bench_net_federation.py``.
+    Same wire contract and ordering guarantees as :class:`RPCServer`;
+    ``heavy`` registration is ignored (every connection already owns a
+    thread).
+    """
 
     def __init__(self, table: MethodTable, host: str = "127.0.0.1", port: int = 0):
         self.table = table
@@ -85,7 +508,7 @@ class RPCServer:
     def endpoint(self) -> Tuple[str, int]:
         return (self._host, self._port)
 
-    def start(self) -> "RPCServer":
+    def start(self) -> "ThreadedRPCServer":
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name=f"rpc-accept:{self._port}", daemon=True
         )
@@ -93,7 +516,6 @@ class RPCServer:
         return self
 
     def serve_forever(self) -> None:
-        """Blocking variant for worker processes / the CLI entrypoint."""
         if self._accept_thread is None:
             self.start()
         self._stopping.wait()
@@ -122,14 +544,7 @@ class RPCServer:
             conns = list(self._conns.values())
             self._conns.clear()
         for c in conns:
-            try:
-                c.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                c.close()
-            except OSError:
-                pass
+            RPCServer._force_close(c)
         if self._accept_thread is not None:
             self._accept_thread.join(timeout=5)
 
@@ -175,9 +590,13 @@ class RPCServer:
                 for frame in frames:
                     if frame.kind != REQUEST:
                         continue  # only clients originate the other kinds
-                    try:
-                        reply = self._dispatch(frame)
-                    except Exception:
+                    resolved = _dispatch_light(self.table, frame)
+                    if isinstance(resolved, bytes):
+                        reply = resolved
+                    else:
+                        name, fn, _heavy = resolved
+                        reply = _run_method(name, fn, frame)
+                    if reply is None:
                         return  # reply unframeable (e.g. over-size): drop conn
                     try:
                         conn.sendall(reply)
@@ -190,26 +609,3 @@ class RPCServer:
                 conn.close()
             except OSError:
                 pass
-
-    def _dispatch(self, frame) -> bytes:
-        if frame.method_id == METHOD_RESOLVE:
-            return encode_frame(
-                METHOD_RESOLVE, RESPONSE, frame.request_id,
-                {"methods": self.table.names()},
-            )
-        try:
-            name, fn = self.table.lookup(frame.method_id)
-        except KeyError as e:
-            return encode_frame(
-                frame.method_id, ERROR, frame.request_id,
-                {"method": f"#{frame.method_id}", "etype": "KeyError", "message": str(e)},
-            )
-        try:
-            out = fn(frame.env, frame.arrays)
-            env, arrays = out if out is not None else ({}, ())
-            return encode_frame(frame.method_id, RESPONSE, frame.request_id, env, arrays)
-        except Exception as e:  # noqa: BLE001 - every handler error goes on the wire
-            return encode_frame(
-                frame.method_id, ERROR, frame.request_id,
-                {"method": name, "etype": type(e).__name__, "message": str(e)},
-            )

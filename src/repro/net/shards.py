@@ -5,7 +5,11 @@ one :class:`~repro.core.ps.PSShard` / :class:`~repro.core.provenance.\
 ProvenanceShard` each behind a registered method table (``ps.*`` / ``prov.*``
 namespaces — one worker process can host both).  Shards are created lazily by
 a ``*.configure`` call from the federation front-end, so worker processes are
-generic "shard hosts" that need no topology knowledge at spawn time.
+generic "shard hosts" that need no topology knowledge at spawn time.  Bulk
+read methods (``prov.query``, ``prov.dump``, ``ps.peek_table``, ...) are
+registered ``heavy=True`` so the event-loop server runs them on worker
+threads while the ``ps.push`` / ``prov.add_many`` hot path stays inline on
+the loop.
 
 Client side, :class:`RemotePSShard` / :class:`RemoteProvenanceShard` satisfy
 the exact method/attribute surface :class:`~repro.core.ps.FederatedPS` and
@@ -15,21 +19,34 @@ zero behavioral drift:
 
   * stats rows travel as raw float64 ndarray bytes (never through text), so
     the server-side ``merge_moments`` sees bit-identical operands and the
-    federation's PS bit-match guarantee survives the wire;
+    federation's PS bit-match guarantee survives the wire.  The hot path
+    (``push_nowait``) ships only the delta's *non-empty* rows plus their
+    indices — merging an empty row is a bitwise no-op (stats.py), so the
+    sparse push is bit-identical to the full slice at a fraction of the
+    bytes and merge work;
   * provenance docs travel as the same JSON objects the local shard would
     have indexed, and the server assigns/persists the same global ``seq``,
     so federated query results and shard JSONL files are byte-identical to
-    local mode.
+    local mode.  Small doc adds are coalesced client-side and shipped as
+    single ``prov.add_many`` frames.
 
-``push_async``/``add_async`` + ``finish`` expose the client's pipelining to
-the federations: a front-end can put one request in flight per touched shard
-and overlap the shards' work across processes instead of serializing on
-round-trips.
+Stubs talking to the same endpoint share one multiplexed connection
+(:meth:`RPCClient.shared`).  The ``*_nowait`` methods are the asynchronous
+hot path: they put a request on the wire and return, tracking the future in
+a bounded in-flight window.  Because the server executes a connection's
+requests strictly in order, any later *call* (query, peek_table, stats,
+dump) observes every ``nowait`` write that preceded it — reads need no
+explicit barrier.  Errors from fire-and-forget writes are surfaced loudly
+on the next operation or on :meth:`drain`; the window cap turns a
+persistently slow shard into caller backpressure instead of unbounded
+client memory.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
-from typing import Any, Dict, List, Optional, Tuple
+import threading
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -57,8 +74,9 @@ class PSShardService:
     def register(self, table: MethodTable) -> "PSShardService":
         table.register("ps.configure", self._configure)
         table.register("ps.push", self._push)
+        table.register("ps.push_rows", self._push_rows)
         table.register("ps.grow", self._grow)
-        table.register("ps.peek_table", self._peek_table)
+        table.register("ps.peek_table", self._peek_table, heavy=True)
         table.register("ps.stats", self._stats)
         return self
 
@@ -74,12 +92,24 @@ class PSShardService:
         _require(self._shard, "ps").push(np.asarray(arrays[0], dtype=np.float64))
         return {}, ()
 
+    def _push_rows(self, env, arrays):
+        # Sparse push: only the delta's non-empty rows travel; rows_total
+        # carries the full slice length so growth matches the dense path.
+        _require(self._shard, "ps").push_rows(
+            np.asarray(arrays[0], dtype=np.int64),
+            np.asarray(arrays[1], dtype=np.float64),
+            int(env["rows_total"]),
+        )
+        return {}, ()
+
     def _grow(self, env, arrays):
         _require(self._shard, "ps").grow(int(env["num_rows"]))
         return {}, ()
 
     def _peek_table(self, env, arrays):
-        return {}, (_require(self._shard, "ps").peek_table(),)
+        # Locked copy: push_rows mutates the table in place, and this
+        # handler runs on a worker thread concurrent with inline pushes.
+        return {}, (_require(self._shard, "ps").peek_table_locked(),)
 
     def _stats(self, env, arrays):
         shard = _require(self._shard, "ps")
@@ -92,62 +122,99 @@ class PSShardService:
 
 
 class ProvenanceShardService:
-    """Hosts one ProvenanceShard; registers the ``prov.*`` method namespace."""
+    """Hosts one ProvenanceShard; registers the ``prov.*`` method namespace.
+
+    The event-loop server runs heavy reads (query/dump/take_resumed) on
+    worker threads concurrently with inline adds on the loop thread.
+    *Mutations* serialize on the service lock (they are all fast, so the
+    loop never blocks long); *reads* run lock-free against the shard's
+    append-only structures (see the ProvenanceShard concurrency contract) —
+    a long query scan must never make the loop thread wait, or one slow
+    viz drill-down would stall every connection on the worker.
+    """
 
     def __init__(self) -> None:
         self._shard: Optional[ProvenanceShard] = None
+        self._lock = threading.Lock()
 
     def register(self, table: MethodTable) -> "ProvenanceShardService":
         table.register("prov.configure", self._configure)
         table.register("prov.add", self._add)
-        table.register("prov.query", self._query)
-        table.register("prov.take_resumed", self._take_resumed)
-        table.register("prov.dump", self._dump)
+        table.register("prov.add_many", self._add_many)
+        table.register("prov.query", self._query, heavy=True)
+        table.register("prov.take_resumed", self._take_resumed, heavy=True)
+        table.register("prov.dump", self._dump, heavy=True)
         table.register("prov.len", self._len)
         table.register("prov.flush", self._flush)
         table.register("prov.close", self._close)
         return self
 
     def _configure(self, env, arrays):
-        if self._shard is not None:
-            self._shard.close()
-        self._shard = ProvenanceShard(
-            path=env.get("path"),
-            append=bool(env.get("append", False)),
-            header=env.get("header"),
-        )
+        with self._lock:
+            if self._shard is not None:
+                self._shard.close()
+            self._shard = ProvenanceShard(
+                path=env.get("path"),
+                append=bool(env.get("append", False)),
+                header=env.get("header"),
+            )
         return {}, ()
 
     def _add(self, env, arrays):
-        _require(self._shard, "prov").add(
-            env["doc"], int(env["seq"]), write=bool(env.get("write", True))
-        )
+        with self._lock:
+            _require(self._shard, "prov").add(
+                env["doc"], int(env["seq"]), write=bool(env.get("write", True))
+            )
         return {}, ()
 
+    def _add_many(self, env, arrays):
+        """One frame, many docs: the client-side coalescing endpoint.
+
+        Docs are applied in order; ``ProvenanceShard.add`` skips seqs it has
+        already applied, so a retried batch (connection killed between the
+        server applying it and the client seeing the response) never
+        duplicates a doc or a JSONL line.
+        """
+        with self._lock:
+            shard = _require(self._shard, "prov")
+            write = bool(env.get("write", True))
+            for doc, seq in zip(env["docs"], env["seqs"]):
+                shard.add(doc, int(seq), write=write)
+        return {"n": len(env["docs"])}, ()
+
     def _query(self, env, arrays):
+        # Lock-free read: shard structures are append-only and positions are
+        # published only after their doc/seq are in place.
         hits = _require(self._shard, "prov").query(
             rank=env.get("rank"), fid=env.get("fid"), step=env.get("step"),
-            t0=env.get("t0"), t1=env.get("t1"),
+            t0=env.get("t0"), t1=env.get("t1"), func=env.get("func"),
+            severity=env.get("severity"), min_severity=env.get("min_severity"),
         )
         return {"hits": [[seq, doc] for seq, doc in hits]}, ()
 
     def _take_resumed(self, env, arrays):
-        return {"docs": _require(self._shard, "prov").take_resumed()}, ()
+        with self._lock:  # mutation (swaps the resumed list), but O(1)
+            return {"docs": _require(self._shard, "prov").take_resumed()}, ()
 
     def _dump(self, env, arrays):
+        # Lock-free read; zip truncates to the shorter list, so a racing
+        # add can only make the dump a consistent prefix.
         shard = _require(self._shard, "prov")
         return {"hits": [[seq, doc] for seq, doc in zip(shard.seqs, shard.docs)]}, ()
 
     def _len(self, env, arrays):
-        return {"n": len(_require(self._shard, "prov"))}, ()
+        with self._lock:
+            return {"n": len(_require(self._shard, "prov"))}, ()
 
     def _flush(self, env, arrays):
-        _require(self._shard, "prov").flush()
+        with self._lock:
+            _require(self._shard, "prov").flush()
         return {}, ()
 
     def _close(self, env, arrays):
-        if self._shard is not None:
-            self._shard.close()
+        with self._lock:
+            if self._shard is not None:
+                self._shard.close()
         return {}, ()
 
 
@@ -164,8 +231,62 @@ def build_shard_table(kind: str = "both") -> MethodTable:
 
 
 # --------------------------------------------------------------------- client
+class _InflightWindow:
+    """Bounded fire-and-forget bookkeeping shared by the remote stubs.
+
+    Tracks the futures of ``*_nowait`` requests.  ``reap`` pops completed
+    futures from the head and rethrows their errors, so a dead worker fails
+    the *next* operation loudly instead of silently dropping writes;
+    ``admit`` blocks when the window is full (client-side backpressure);
+    ``drain`` waits everything out (close/teardown barriers).
+    """
+
+    def __init__(self, client: RPCClient, limit: int):
+        self._client = client
+        self._limit = max(int(limit), 1)
+        self._futs: Deque[concurrent.futures.Future] = collections.deque()
+        self._lock = threading.Lock()
+
+    def _pop_done_locked(self) -> List[concurrent.futures.Future]:
+        done = []
+        while self._futs and self._futs[0].done():
+            done.append(self._futs.popleft())
+        return done
+
+    def reap(self) -> None:
+        with self._lock:
+            done = self._pop_done_locked()
+        for fut in done:
+            fut.result()  # rethrows ConnectionLost / RemoteError
+
+    def admit(self, fut: concurrent.futures.Future) -> None:
+        self.reap()
+        while True:
+            with self._lock:
+                if len(self._futs) < self._limit:
+                    self._futs.append(fut)
+                    return
+                oldest = self._futs.popleft()
+            self._client.wait(oldest)  # window full: wait for the head
+
+    def drain(self) -> None:
+        self._client.flush_sends()  # buffered frames must reach the wire
+        while True:
+            with self._lock:
+                if not self._futs:
+                    return
+                fut = self._futs.popleft()
+            self._client.wait(fut)
+
+
 class RemotePSShard:
-    """Drop-in for :class:`~repro.core.ps.PSShard` over the RPC transport."""
+    """Drop-in for :class:`~repro.core.ps.PSShard` over the RPC transport.
+
+    ``push_nowait`` is the asynchronous hot path: one sparse-row frame on
+    the wire, no response wait.  Reads (``peek_table``, ``n_pushes``) are
+    ordinary calls and therefore observe every prior push on the same
+    connection (server-side FIFO) without an explicit barrier.
+    """
 
     def __init__(
         self,
@@ -174,11 +295,17 @@ class RemotePSShard:
         num_shards: int,
         num_funcs: int,
         timeout: float = 30.0,
+        max_inflight: int = 64,
     ):
+        # The window is deliberately shallower than the provenance stub's:
+        # a PS federation takes a periodic FIFO barrier (the aggregate
+        # refresh), and every queued push ahead of it is barrier latency.
         self.shard_id = shard_id
         self.num_shards = num_shards
         self.endpoint = endpoint
-        self._client = RPCClient(endpoint, timeout=timeout)
+        self._client = RPCClient.shared(endpoint, timeout=timeout)
+        self._window = _InflightWindow(self._client, max_inflight)
+        self._closed = False
         self._client.call(
             "ps.configure",
             {"shard_id": shard_id, "num_shards": num_shards, "num_funcs": num_funcs},
@@ -188,14 +315,52 @@ class RemotePSShard:
         self.finish(self.push_async(rows))
 
     def push_async(self, rows: np.ndarray) -> concurrent.futures.Future:
-        """Pipeline a push; pair with :meth:`finish`.  Lets the federation
-        overlap the per-shard merges of one delta across worker processes."""
+        """Pipeline a dense push; pair with :meth:`finish`.  (The PR 3
+        one-in-flight-per-shard path, kept as the ``io_mode="sync"``
+        fallback and for API compatibility.)"""
         return self._client.call_async(
             "ps.push", arrays=(np.ascontiguousarray(rows, dtype=np.float64),)
         )
 
+    def push_nowait(self, rows: np.ndarray) -> None:
+        """Fire-and-forget sparse push: ship only the non-empty rows.
+
+        Bit-identical to pushing the full slice — merging an empty row is
+        an exact no-op (``merge_moments``) — at a fraction of the wire
+        bytes and server merge work.  Errors surface on the next operation
+        or on :meth:`drain`.
+        """
+        from repro.core.stats import N  # local: keep module import light
+
+        rows = np.asarray(rows, dtype=np.float64)
+        nz = np.nonzero(rows[:, N] > 0)[0]
+        self.push_sparse_nowait(nz, rows[nz], int(rows.shape[0]))
+
+    def push_sparse_nowait(
+        self, idx: np.ndarray, rows: np.ndarray, rows_total: int
+    ) -> None:
+        """Fire-and-forget push of pre-gathered non-empty rows.
+
+        ``idx`` are shard-local row indices; the caller (FederatedPS) has
+        already gathered the rows, so no per-shard strided slice or nonzero
+        pass happens here.  The frame rides the client's send buffer —
+        syscalls, the dominant socket-mode cost, are amortized over many
+        pushes.
+        """
+        fut = self._client.call_async(
+            "ps.push_rows",
+            {"rows_total": int(rows_total)},
+            arrays=(np.ascontiguousarray(idx), np.ascontiguousarray(rows)),
+            buffered=True,
+        )
+        self._window.admit(fut)
+
     def finish(self, fut: concurrent.futures.Future) -> None:
         self._client.wait(fut, name="ps.push")
+
+    def drain(self) -> None:
+        """Barrier: wait out (and error-check) every fire-and-forget push."""
+        self._window.drain()
 
     def grow(self, num_rows: int) -> None:
         self._client.call("ps.grow", {"num_rows": int(num_rows)})
@@ -204,12 +369,27 @@ class RemotePSShard:
         _env, arrays = self._client.call("ps.peek_table")
         return arrays[0]
 
+    def peek_table_async(self) -> concurrent.futures.Future:
+        return self._client.call_async("ps.peek_table")
+
+    def finish_peek(self, fut: concurrent.futures.Future) -> np.ndarray:
+        """Resolve a :meth:`peek_table_async` future to its table."""
+        return self._client.wait(fut)[1][0]
+
     @property
     def n_pushes(self) -> int:
         return int(self._client.call("ps.stats")[0]["n_pushes"])
 
     def close(self) -> None:
-        self._client.close()
+        if self._closed:
+            return  # idempotent: the shared client's refcount drops once
+        self._closed = True
+        try:
+            self.drain()
+        except ConnectionLost:
+            pass  # workers already gone; RemoteError etc. stay loud
+        finally:
+            self._client.close()
 
 
 class RemoteProvenanceShard:
@@ -219,7 +399,12 @@ class RemoteProvenanceShard:
     meaningful there — same-host workers or a shared filesystem).  ``close``
     is teardown-path best-effort: it swallows :class:`ConnectionLost` so a
     federation can always be closed after its workers died, while the data
-    path (``add``/``query``) stays loud.
+    path (``add``/``add_many``/``query``) stays loud.
+
+    ``add_many*`` is the coalescing hot path: a frame's docs for one shard
+    travel as ONE request frame; the worker applies (and JSONL-appends)
+    them in order, skipping seqs it already holds so a retried batch after
+    a mid-batch connection loss never drops or duplicates a doc.
     """
 
     def __init__(
@@ -229,14 +414,18 @@ class RemoteProvenanceShard:
         append: bool = False,
         header: Optional[Dict[str, Any]] = None,
         timeout: float = 30.0,
+        max_inflight: int = 512,
     ):
         self.path = path
         self.endpoint = endpoint
-        self._client = RPCClient(endpoint, timeout=timeout)
+        self._client = RPCClient.shared(endpoint, timeout=timeout)
+        self._window = _InflightWindow(self._client, max_inflight)
+        self._closed = False
         self._client.call(
             "prov.configure", {"path": path, "append": append, "header": header}
         )
 
+    # -------------------------------------------------------------- mutation
     def add(self, doc: Dict[str, Any], seq: int, write: bool = True) -> None:
         self.finish(self.add_async(doc, seq, write))
 
@@ -247,10 +436,43 @@ class RemoteProvenanceShard:
             "prov.add", {"doc": doc, "seq": int(seq), "write": bool(write)}
         )
 
+    def add_many(
+        self, docs: Sequence[Dict[str, Any]], seqs: Sequence[int], write: bool = True
+    ) -> None:
+        self.finish(self.add_many_async(docs, seqs, write))
+
+    def add_many_async(
+        self, docs: Sequence[Dict[str, Any]], seqs: Sequence[int], write: bool = True
+    ) -> concurrent.futures.Future:
+        return self._client.call_async(
+            "prov.add_many",
+            {"docs": list(docs), "seqs": [int(s) for s in seqs], "write": bool(write)},
+        )
+
+    def add_many_nowait(
+        self, docs: Sequence[Dict[str, Any]], seqs: Sequence[int], write: bool = True
+    ) -> None:
+        """Fire-and-forget batch add; errors surface on the next operation
+        or :meth:`drain`.  Later calls on this connection (query/dump/len)
+        observe the batch — the server executes per-connection in order."""
+        self._window.admit(
+            self._client.call_async(
+                "prov.add_many",
+                {"docs": list(docs), "seqs": [int(s) for s in seqs],
+                 "write": bool(write)},
+                buffered=True,
+            )
+        )
+
     def finish(self, fut: concurrent.futures.Future) -> None:
-        """Resolve any pipelined call (add_async / flush_async) future."""
+        """Resolve any pipelined call (add/add_many/flush) future."""
         self._client.wait(fut, name="prov")
 
+    def drain(self) -> None:
+        """Barrier: wait out (and error-check) every fire-and-forget write."""
+        self._window.drain()
+
+    # --------------------------------------------------------------- queries
     def query(
         self,
         rank: Optional[int] = None,
@@ -258,26 +480,66 @@ class RemoteProvenanceShard:
         step: Optional[int] = None,
         t0: Optional[int] = None,
         t1: Optional[int] = None,
+        func: Optional[str] = None,
+        severity: Optional[int] = None,
+        min_severity: Optional[int] = None,
     ) -> List[Tuple[int, Dict[str, Any]]]:
-        env, _ = self._client.call(
-            "prov.query", {"rank": rank, "fid": fid, "step": step, "t0": t0, "t1": t1}
+        return self.finish_query(
+            self.query_async(rank, fid, step, t0, t1, func, severity, min_severity)
         )
+
+    def query_async(
+        self,
+        rank: Optional[int] = None,
+        fid: Optional[int] = None,
+        step: Optional[int] = None,
+        t0: Optional[int] = None,
+        t1: Optional[int] = None,
+        func: Optional[str] = None,
+        severity: Optional[int] = None,
+        min_severity: Optional[int] = None,
+    ) -> concurrent.futures.Future:
+        """Pipeline a query; lets the federation fan one query out to all
+        owning shards concurrently instead of serializing round-trips."""
+        return self._client.call_async(
+            "prov.query",
+            {"rank": rank, "fid": fid, "step": step, "t0": t0, "t1": t1,
+             "func": func, "severity": severity, "min_severity": min_severity},
+        )
+
+    def finish_query(
+        self, fut: concurrent.futures.Future
+    ) -> List[Tuple[int, Dict[str, Any]]]:
+        """Resolve a query_async/dump_async future to its (seq, doc) hits —
+        the public half of the fan-out read API (used by the federation)."""
+        env, _ = self._client.wait(fut)
         return [(seq, doc) for seq, doc in env["hits"]]
 
     def take_resumed(self) -> List[Dict[str, Any]]:
         return self._client.call("prov.take_resumed")[0]["docs"]
 
     def dump(self) -> List[Tuple[int, Dict[str, Any]]]:
-        return [(seq, doc) for seq, doc in self._client.call("prov.dump")[0]["hits"]]
+        return self.finish_query(self.dump_async())
 
+    def dump_async(self) -> concurrent.futures.Future:
+        return self._client.call_async("prov.dump")
+
+    # ------------------------------------------------------------- lifecycle
     def flush(self) -> None:
         self._client.call("prov.flush")
 
     def flush_async(self) -> concurrent.futures.Future:
         return self._client.call_async("prov.flush")
 
+    def flush_nowait(self) -> None:
+        self._window.admit(self._client.call_async("prov.flush", buffered=True))
+
     def close(self) -> None:
+        if self._closed:
+            return  # idempotent: the shared client's refcount drops once
+        self._closed = True
         try:
+            self.drain()
             self._client.call("prov.close")
         except ConnectionLost:
             pass  # workers already gone; nothing left to close remotely

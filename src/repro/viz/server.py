@@ -125,17 +125,28 @@ class VizServer:
         step: Optional[int] = None,
         t0: Optional[int] = None,
         t1: Optional[int] = None,
+        func: Optional[str] = None,
+        severity: Optional[int] = None,
+        min_severity: Optional[int] = None,
         limit: int = 100,
     ) -> Dict[str, Any]:
         """Raw provenance query endpoint (paper §V) over the provenance DB.
 
         Transparent to the store topology: a ``FederatedProvenanceDB`` fans
         the query out to the owning shards and merge-returns docs in the
-        same global ingest order a single store would.
+        same global ingest order a single store would.  ``func`` (function
+        name), ``severity`` (exact bucket), and ``min_severity``
+        (threshold) are the drill-down axes backed by the shards' secondary
+        posting lists.
         """
-        docs = self.monitor.provdb.query(rank=rank, fid=fid, step=step, t0=t0, t1=t1)
+        docs = self.monitor.provdb.query(
+            rank=rank, fid=fid, step=step, t0=t0, t1=t1,
+            func=func, severity=severity, min_severity=min_severity,
+        )
         return {
-            "query": {"rank": rank, "fid": fid, "step": step, "t0": t0, "t1": t1},
+            "query": {"rank": rank, "fid": fid, "step": step, "t0": t0, "t1": t1,
+                      "func": func, "severity": severity,
+                      "min_severity": min_severity},
             "n_total": len(docs),
             "docs": docs[:limit],
             "topology": {

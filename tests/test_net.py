@@ -1,4 +1,8 @@
-"""repro.net: framing fuzz, RPC semantics, failure modes, loud degradation."""
+"""repro.net: framing fuzz, RPC semantics, failure modes, loud degradation,
+and event-loop server load behavior (many connections, partial writes,
+slow-reader backpressure, mid-batch kills)."""
+import concurrent.futures
+import socket
 import threading
 import time
 
@@ -16,10 +20,18 @@ from repro.net import (
     RemoteError,
     RPCClient,
     RPCServer,
+    ThreadedRPCServer,
     TruncatedStream,
     encode_frame,
 )
-from repro.net.framing import REQUEST, HEADER, MAGIC, iter_frames, pack_payload
+from repro.net.framing import (
+    METHOD_RESOLVE,
+    REQUEST,
+    HEADER,
+    MAGIC,
+    iter_frames,
+    pack_payload,
+)
 from repro.net.shards import PSShardService
 
 
@@ -162,7 +174,11 @@ def _echo_table():
     table = MethodTable()
     table.register("echo", lambda env, arrays: (env, arrays))
     table.register("boom", lambda env, arrays: (_ for _ in ()).throw(ValueError("nope")))
-    table.register("slow", lambda env, arrays: (time.sleep(float(env["s"])), ({}, ()))[1])
+    # heavy: a sleeping handler must occupy a worker thread, not the loop
+    table.register(
+        "slow", lambda env, arrays: (time.sleep(float(env["s"])), ({}, ()))[1],
+        heavy=True,
+    )
     return table
 
 
@@ -261,6 +277,206 @@ def test_federated_ps_degrades_loudly_when_workers_die():
         for step in range(3):  # first push may ride the half-dead socket
             fed.update_and_fetch(0, 1 + step, d)
     fed.close()
+
+
+# ------------------------------------------------- event-loop server load
+def test_evloop_many_concurrent_connections():
+    """≥64 concurrent connections, each with pipelined in-flight requests,
+    served correctly by the single loop thread."""
+    server = RPCServer(_echo_table()).start()
+    clients = []
+    try:
+        clients = [
+            RPCClient(server.endpoint, timeout=30, connect_retries=3)
+            for _ in range(64)
+        ]
+        futs = [
+            (i, j, c.call_async("echo", {"i": i, "j": j}))
+            for i, c in enumerate(clients)
+            for j in range(10)
+        ]
+        for i, j, fut in futs:
+            env, _ = clients[i].wait(fut)
+            assert env == {"i": i, "j": j}
+    finally:
+        for c in clients:
+            c.close()
+        server.stop()
+
+
+def _handshake(sock):
+    """Resolve the method table on a raw socket; returns {name: id}."""
+    sock.sendall(encode_frame(METHOD_RESOLVE, REQUEST, 0, {}))
+    dec = FrameDecoder()
+    while True:
+        frames = dec.feed(sock.recv(1 << 20))
+        if frames:
+            return {str(k): int(v) for k, v in frames[0].env["methods"].items()}
+
+
+def test_evloop_one_byte_partial_writes():
+    """Requests dribbled one byte at a time (worst-case interleaved partial
+    writes) must decode and answer exactly like coalesced ones."""
+    server = RPCServer(_echo_table()).start()
+    try:
+        with socket.create_connection(server.endpoint, timeout=10) as sock:
+            methods = _handshake(sock)
+            blob = b"".join(
+                encode_frame(methods["echo"], REQUEST, 100 + i, {"i": i})
+                for i in range(3)
+            )
+            for k in range(len(blob)):
+                sock.sendall(blob[k : k + 1])
+            dec = FrameDecoder()
+            got = []
+            while len(got) < 3:
+                got.extend(dec.feed(sock.recv(1 << 20)))
+            assert [(f.request_id, f.env["i"]) for f in got] == [
+                (100 + i, i) for i in range(3)
+            ]
+    finally:
+        server.stop()
+
+
+def test_evloop_slow_reader_backpressure():
+    """A peer that requests big responses but stops reading must trip the
+    outbound high-water mark (server pauses *reading* that connection — no
+    unbounded buffering), must not block other connections, and must get
+    every response once it resumes reading."""
+    server = RPCServer(_echo_table(), high_water=64 << 10, low_water=8 << 10).start()
+    n_req, payload = 64, np.zeros(32 << 10, np.uint8)
+    try:
+        with socket.create_connection(server.endpoint, timeout=30) as slow:
+            methods = _handshake(slow)
+            blob = b"".join(
+                encode_frame(methods["echo"], REQUEST, 1 + i, {}, [payload])
+                for i in range(n_req)
+            )
+            # The server will stop reading once ~64 KiB of responses are
+            # queued, so our send must run on a side thread (it blocks when
+            # the kernel buffers fill) while this thread checks liveness.
+            sender = threading.Thread(target=slow.sendall, args=(blob,), daemon=True)
+            sender.start()
+
+            deadline = time.time() + 30
+            while server.backpressure_pauses == 0:
+                assert time.time() < deadline, "server never paused the slow reader"
+                time.sleep(0.01)
+
+            # The loop is not wedged: a second connection still gets served.
+            other = RPCClient(server.endpoint, timeout=10)
+            assert other.call("echo", {"ok": 1})[0] == {"ok": 1}
+            other.close()
+
+            # Resume reading: every response arrives, none dropped.
+            dec = FrameDecoder()
+            got = 0
+            while got < n_req:
+                data = slow.recv(1 << 20)
+                assert data, "server closed the backpressured connection"
+                for frame in dec.feed(data):
+                    assert frame.arrays[0].nbytes == payload.nbytes
+                    got += 1
+            sender.join(timeout=10)
+            assert not sender.is_alive()
+        assert server.backpressure_pauses >= 1
+    finally:
+        server.stop()
+
+
+def test_evloop_inbound_backpressure_behind_heavy_handler():
+    """Requests pipelined behind an in-flight heavy handler are bounded:
+    past pending_max the server stops *reading* the connection (frames stay
+    in kernel buffers, not server memory) and resumes as the backlog
+    drains — with every request still answered in order."""
+    server = RPCServer(_echo_table(), pending_max=8).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=30)
+        slow_fut = client.call_async("slow", {"s": 0.5})
+        futs = [client.call_async("echo", {"i": i}) for i in range(100)]
+        client.wait(slow_fut)
+        assert [client.wait(f)[0]["i"] for f in futs] == list(range(100))
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_threaded_fallback_server_roundtrip():
+    """The --threaded fallback serves the same wire contract."""
+    server = ThreadedRPCServer(_echo_table()).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        futs = [client.call_async("echo", {"i": i}) for i in range(10)]
+        assert [client.wait(f)[0]["i"] for f in futs] == list(range(10))
+        with pytest.raises(RemoteError):
+            client.call("boom")
+        client.close()
+    finally:
+        server.stop()
+
+
+# ------------------------------------------------------- client semantics
+def test_request_id_wraparound_skips_inflight():
+    """Request ids wrap at 2³² and must skip ids still awaiting responses."""
+    server = RPCServer(_echo_table()).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        client._next_rid = 0xFFFFFFFF - 1  # near the wrap boundary
+        futs = [client.call_async("echo", {"i": i}) for i in range(5)]
+        assert [client.wait(f)[0]["i"] for f in futs] == list(range(5))
+        assert client._next_rid < 10  # wrapped past 2³²-1 back into [1, ...]
+        # Collision: a still-pending rid must be skipped, not reused.
+        blocker = concurrent.futures.Future()
+        with client._pending_lock:
+            client._pending[5] = (client._gen, "x", blocker)
+        client._next_rid = 5
+        env, _ = client.call("echo", {"ok": True})
+        assert env == {"ok": True}
+        assert 5 in client._pending  # the fake in-flight call kept its id
+        with client._pending_lock:
+            del client._pending[5]
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_call_timeout_surfaces_method_name():
+    """CallTimeout names the *method* even through name-less wait paths."""
+    server = RPCServer(_echo_table()).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        fut = client.call_async("slow", {"s": 30.0})
+        with pytest.raises(CallTimeout, match="'slow'"):
+            client.wait(fut, timeout=0.05)  # note: no name= passed
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_buffered_sends_flush_on_wait_and_preserve_order():
+    """A buffered (fire-and-forget) frame reaches the wire before any later
+    unbuffered frame, and wait() flushes so a buffered future resolves."""
+    calls = []
+    table = MethodTable()
+    table.register("a", lambda env, arrays: (calls.append(("a", env["i"])), ({}, ()))[1])
+    table.register("b", lambda env, arrays: (calls.append(("b", env["i"])), ({}, ()))[1])
+    server = RPCServer(table).start()
+    try:
+        client = RPCClient(server.endpoint, timeout=10)
+        f1 = client.call_async("a", {"i": 0}, buffered=True)
+        f2 = client.call_async("a", {"i": 1}, buffered=True)
+        assert client._sendbuf  # still parked client-side
+        client.call("b", {"i": 2})  # unbuffered: flushes the buffer first
+        client.wait(f1)
+        client.wait(f2)
+        assert calls == [("a", 0), ("a", 1), ("b", 2)]
+        # wait() alone must also flush: nothing else will.
+        f3 = client.call_async("a", {"i": 3}, buffered=True)
+        client.wait(f3)
+        assert calls[-1] == ("a", 3)
+        client.close()
+    finally:
+        server.stop()
 
 
 def test_shard_service_unconfigured_is_typed_error():

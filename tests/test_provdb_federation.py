@@ -331,6 +331,138 @@ def test_monitor_with_sharded_provdb(tmp_path):
     mon.close()
 
 
+# ------------------------------------------- secondary indexes (func/severity)
+def test_secondary_index_queries_match_filter_scan(tmp_path):
+    """by-function-name and by-anomaly-severity posting lists must return
+    exactly what a full filter scan would, federated == single, all axes
+    combinable."""
+    registry, stream = _anomaly_stream()
+    single = ProvenanceDB(registry=registry)
+    fed = FederatedProvenanceDB(num_shards=3, registry=registry)
+    for res, comm in stream:
+        single.ingest(res, comm)
+        fed.ingest(res, comm)
+    docs = single.records
+    assert all("severity" in d for d in docs)
+    sevs = {d["severity"] for d in docs}
+    funcs = {d["anomaly"]["func"] for d in docs}
+    assert funcs  # registry present -> names indexed
+    for func in sorted(funcs):
+        want = [d for d in docs if d["anomaly"]["func"] == func]
+        assert single.query(func=func) == want
+        assert fed.query(func=func) == want
+    for sev in sorted(sevs):
+        want = [d for d in docs if d["severity"] == sev]
+        assert single.query(severity=sev) == want
+        assert fed.query(severity=sev) == want
+        want_min = [d for d in docs if d["severity"] >= sev]
+        assert single.query(min_severity=sev) == want_min
+        assert fed.query(min_severity=sev) == want_min
+    # combined axes still filter correctly
+    d0 = docs[0]
+    func, rank = d0["anomaly"]["func"], d0["rank"]
+    want = [d for d in docs if d["anomaly"]["func"] == func and d["rank"] == rank]
+    assert fed.query(func=func, rank=rank) == want
+    single.close()
+    fed.close()
+
+
+def test_secondary_index_queries_over_socket():
+    """func/severity drill-downs cross the wire unchanged."""
+    from repro.launch.shard_server import LocalShardHost
+
+    registry, stream = _anomaly_stream()
+    local = FederatedProvenanceDB(num_shards=2, registry=registry)
+    with LocalShardHost(2, kind="prov") as host:
+        sock = FederatedProvenanceDB(
+            registry=registry, transport="socket", endpoints=host.endpoints
+        )
+        for res, comm in stream:
+            local.ingest(res, comm)
+            sock.ingest(res, comm)
+        d0 = local.records[0]
+        func = d0["anomaly"]["func"]
+        assert sock.query(func=func) == local.query(func=func)
+        assert sock.query(min_severity=1) == local.query(min_severity=1)
+        assert sock.query(severity=d0["severity"]) == local.query(
+            severity=d0["severity"]
+        )
+        local.close()
+        sock.close()
+
+
+def test_provenance_view_drilldown_axes(tmp_path):
+    spec = nwchem_like(anomaly_rate=0.008)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 50.0
+    gen = WorkloadGenerator(spec, n_ranks=2, seed=0)
+    mon = ChimbukoMonitor(
+        num_funcs=len(gen.registry), registry=gen.registry, min_samples=20,
+        provdb_shards=2,
+    )
+    for step in range(40):
+        for rank in range(2):
+            mon.ingest(gen.frame(rank, step)[0])
+    viz = VizServer(mon)
+    doc = mon.provdb.records[0]
+    func = doc["anomaly"]["func"]
+    pv = viz.provenance_view(func=func)
+    assert pv["n_total"] >= 1
+    assert all(d["anomaly"]["func"] == func for d in pv["docs"])
+    pv = viz.provenance_view(min_severity=0)
+    assert pv["n_total"] == len(mon.provdb)
+    mon.close()
+
+
+# ------------------------------------------------- mid-batch connection kill
+def _mini_doc(i):
+    return {
+        "type": "anomaly", "step": i, "rank": 0, "severity": 0,
+        "anomaly": {"fid": i % 3, "entry": i * 10, "exit": i * 10 + 5},
+        "call_stack": [], "neighbors": [], "comm": [],
+    }
+
+
+def test_mid_batch_kill_no_dropped_no_duplicated_docs(tmp_path):
+    """A connection killed mid-batch surfaces ConnectionLost; the retry
+    after reconnect must leave every doc exactly once — in the index AND in
+    the JSONL file — whether or not the server applied the doomed batch."""
+    from repro.net import ConnectionLost, RPCServer
+    from repro.net.shards import RemoteProvenanceShard, build_shard_table
+
+    path = str(tmp_path / "shard.jsonl")
+    server = RPCServer(build_shard_table("prov")).start()
+    try:
+        shard = RemoteProvenanceShard(server.endpoint, path=path)
+        batch1 = [_mini_doc(i) for i in range(10)]
+        shard.add_many(batch1, seqs=range(10))
+
+        batch2 = [_mini_doc(10 + i) for i in range(10)]
+        fut = shard.add_many_async(batch2, seqs=range(10, 20))
+        # Kill the connection under the in-flight batch: the response can
+        # no longer arrive, so the client cannot know whether the server
+        # applied it — the ambiguous-retry case.
+        shard._client._drop_connection(ConnectionLost("mid-batch kill"), gen=None)
+        with pytest.raises(ConnectionLost):
+            shard.finish(fut)
+
+        # Retry transparently reconnects; per-shard seq idempotence makes
+        # the ambiguity harmless.
+        shard.add_many(batch2, seqs=range(10, 20))
+        # And an *unambiguous* duplicate (delivered-but-unacked) is skipped.
+        shard.add_many(batch2, seqs=range(10, 20))
+
+        assert len(shard) == 20
+        seqs = [seq for seq, _ in shard.dump()]
+        assert seqs == list(range(20))
+        shard.flush()
+        lines = [json.loads(l) for l in open(path)]
+        assert [d["seq"] for d in lines] == list(range(20))
+        shard.close()
+    finally:
+        server.stop()
+
+
 def test_rank_dashboard_no_overlap():
     mon = ChimbukoMonitor(num_funcs=4)
     for rank, total in enumerate([10, 20, 30, 40]):
