@@ -5,8 +5,13 @@ rare injected delays, runs the distributed on-node AD modules + parameter
 server, and prints: detection quality vs ground truth, the data-reduction
 factor, and a taste of the provenance/viz products.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [OUTPUT_DIR]
+
+With OUTPUT_DIR the monitor artifacts (provenance.jsonl, stream.jsonl,
+viz.json) persist there, ready for `python -m repro.export OUTPUT_DIR`
+to produce a Perfetto-openable trace.json.
 """
+import contextlib
 import json
 import os
 import sys
@@ -21,17 +26,23 @@ from repro.trace.monitor import ChimbukoMonitor
 from repro.viz.server import VizServer
 
 
-def main():
+def main(out_dir=None):
     n_ranks, steps = 8, 50
     spec = nwchem_like(anomaly_rate=0.004, roots_per_frame=6)
     for f in spec.funcs.values():
         f.anomaly_scale = 40.0  # rare-but-extreme: the 6-sigma regime
     gen = WorkloadGenerator(spec, n_ranks=n_ranks, seed=7)
 
-    with tempfile.TemporaryDirectory() as td:
+    with contextlib.ExitStack() as stack:
+        if out_dir is None:
+            td = stack.enter_context(tempfile.TemporaryDirectory())
+        else:
+            os.makedirs(out_dir, exist_ok=True)
+            td = out_dir
         monitor = ChimbukoMonitor(
             num_funcs=len(gen.registry), registry=gen.registry,
             prov_path=os.path.join(td, "provenance.jsonl"), min_samples=30,
+            stream_path=os.path.join(td, "stream.jsonl"),
         )
         preds, truths = [], []
         for step in range(steps):
@@ -69,7 +80,11 @@ def main():
             print(f"  neighbors kept: {len(doc['neighbors'])}, "
                   f"comm events: {len(doc['comm'])}")
         monitor.close()
+        if out_dir is not None:
+            VizServer(monitor).dump(os.path.join(td, "viz.json"))
+            print(f"\nmonitor artifacts in {td} "
+                  f"(export: python -m repro.export {td})")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -170,6 +170,40 @@ def build_anomaly_doc(
     }
 
 
+def match_doc(
+    doc: Dict[str, Any],
+    rank: Optional[int] = None,
+    fid: Optional[int] = None,
+    step: Optional[int] = None,
+    t0: Optional[int] = None,
+    t1: Optional[int] = None,
+    func: Optional[str] = None,
+    severity: Optional[int] = None,
+    min_severity: Optional[int] = None,
+) -> bool:
+    """The per-doc query predicate — ONE definition shared by the shard
+    filter pass and the offline exporter (repro.export), so file-based and
+    live-endpoint queries can never drift apart."""
+    a = doc["anomaly"]
+    if rank is not None and doc["rank"] != rank:
+        return False
+    if step is not None and doc["step"] != step:
+        return False
+    if fid is not None and a["fid"] != fid:
+        return False
+    if func is not None and a.get("func") != func:
+        return False
+    if severity is not None and doc.get("severity", 0) != severity:
+        return False
+    if min_severity is not None and doc.get("severity", 0) < min_severity:
+        return False
+    if t0 is not None and a["exit"] < t0:
+        return False
+    if t1 is not None and a["entry"] > t1:
+        return False
+    return True
+
+
 def _read_docs(path: str) -> List[Dict[str, Any]]:
     """Parse anomaly docs (run_info headers skipped) out of a JSONL file."""
     out = []
@@ -347,24 +381,8 @@ class ProvenanceShard:
         for pos in cands:
             pos = int(pos)
             doc = self.docs[pos]
-            a = doc["anomaly"]
-            if rank is not None and doc["rank"] != rank:
-                continue
-            if step is not None and doc["step"] != step:
-                continue
-            if fid is not None and a["fid"] != fid:
-                continue
-            if func is not None and a.get("func") != func:
-                continue
-            if severity is not None and doc.get("severity", 0) != severity:
-                continue
-            if min_severity is not None and doc.get("severity", 0) < min_severity:
-                continue
-            if t0 is not None and a["exit"] < t0:
-                continue
-            if t1 is not None and a["entry"] > t1:
-                continue
-            out.append((self.seqs[pos], doc))
+            if match_doc(doc, rank, fid, step, t0, t1, func, severity, min_severity):
+                out.append((self.seqs[pos], doc))
         out.sort(key=lambda sd: sd[0])
         return out
 
@@ -408,6 +426,9 @@ class ProvenanceDB:
         self.registry = registry
         self.k = k_neighbors
         self._seq = 0
+        # (seq, severity) per anomaly of the most recent ingest, in
+        # anomaly_idx order — what the trace exporter links instants to.
+        self.last_ingest: List[Tuple[int, int]] = []
         header = {"type": "run_info", **static_provenance(run_info)} if path else None
         self._shard = ProvenanceShard(path=path, append=append, header=header)
         for doc in _resume_order(self._shard.take_resumed()):
@@ -422,8 +443,10 @@ class ProvenanceDB:
     def ingest(self, result: ADFrameResult, comm_events: Optional[np.ndarray] = None) -> int:
         """Store provenance for every anomaly in an analyzed frame."""
         n = 0
+        self.last_ingest = []
         for idx in result.anomaly_idx:
             doc = build_anomaly_doc(result, int(idx), self.registry, self.k, comm_events)
+            self.last_ingest.append((self._seq, int(doc["severity"])))
             self._shard.add(doc, self._seq)
             self._seq += 1
             n += 1
@@ -497,9 +520,9 @@ class FederatedProvenanceDB:
     round-trip waits.  Reads stay exact without barriers (the worker
     executes a connection's requests in order), queries fan out to the
     owning shards concurrently, and write errors surface loudly on the next
-    operation or on :meth:`close`.  ``io_mode="sync"`` restores the PR 3
-    per-doc wait-per-ingest behavior (one release of rollback, and the
-    measured baseline in ``benchmarks/bench_net_federation.py``).
+    operation or on :meth:`close`.  (The PR 3 ``io_mode="sync"``
+    wait-per-ingest fallback is gone; its measured numbers are frozen in
+    ``BENCH_net.json`` as the permanent benchmark denominator.)
     """
 
     def __init__(
@@ -512,12 +535,9 @@ class FederatedProvenanceDB:
         append: bool = False,
         transport: str = "local",
         endpoints=None,
-        io_mode: str = "async",
     ):
         if transport not in ("local", "socket"):
             raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
-        if io_mode not in ("async", "sync"):
-            raise ValueError(f"io_mode must be 'async' or 'sync', got {io_mode!r}")
         if transport == "socket":
             if not endpoints:
                 raise ValueError("transport='socket' requires endpoints")
@@ -525,12 +545,15 @@ class FederatedProvenanceDB:
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self.transport = transport
-        self.io_mode = io_mode
         self.num_shards = num_shards
         self.path = path
         self.registry = registry
         self.k = k_neighbors
         self._seq = 0
+        # (seq, severity) per anomaly of the most recent ingest (see
+        # ProvenanceDB.last_ingest) — identical across shard counts and
+        # transports because the front-end assigns seqs and builds docs.
+        self.last_ingest: List[Tuple[int, int]] = []
         header = {"type": "run_info", **static_provenance(run_info)} if path else None
         owned = shard_paths(path, num_shards)
         if transport == "socket":
@@ -602,11 +625,11 @@ class FederatedProvenanceDB:
         single ``prov.add_many`` frame, shipped fire-and-forget together
         with the flush — ingest never waits on a round-trip (per-shard
         order is preserved by the connection, so every later read observes
-        the batch).  ``io_mode="sync"`` falls back to the PR 3 per-doc
-        pipelined-then-awaited path.
+        the batch).
         """
         batches: Dict[int, Tuple[List[Dict[str, Any]], List[int]]] = {}
         n = 0
+        self.last_ingest = []
         for idx in result.anomaly_idx:
             idx = int(idx)
             doc = build_anomaly_doc(result, idx, self.registry, self.k, comm_events)
@@ -614,35 +637,18 @@ class FederatedProvenanceDB:
             batches.setdefault(s, ([], []))
             batches[s][0].append(doc)
             batches[s][1].append(self._seq)
+            self.last_ingest.append((self._seq, int(doc["severity"])))
             self._seq += 1
             n += 1
-        inflight = []
         for s, (docs, seqs) in batches.items():
             shard = self.shards[s]
             if hasattr(shard, "add_many_nowait"):
-                if self.io_mode == "async":
-                    shard.add_many_nowait(docs, seqs)
-                    shard.flush_nowait()
-                else:
-                    for doc, seq in zip(docs, seqs):
-                        inflight.append((shard, shard.add_async(doc, seq)))
+                shard.add_many_nowait(docs, seqs)
+                shard.flush_nowait()
             else:
                 for doc, seq in zip(docs, seqs):
                     shard.add(doc, seq)
-        for shard, fut in inflight:
-            shard.finish(fut)
-        flushing = []
-        for s in batches:
-            shard = self.shards[s]
-            if hasattr(shard, "add_many_nowait") and self.io_mode == "async":
-                continue  # flush already rode the async batch above
-            flush_async = getattr(shard, "flush_async", None)
-            if flush_async is not None:
-                flushing.append((shard, flush_async()))
-            else:
                 shard.flush()
-        for shard, fut in flushing:
-            shard.finish(fut)
         return n
 
     # -------------------------------------------------------------- queries

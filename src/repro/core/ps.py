@@ -165,13 +165,24 @@ class PSShard:
         self.stats = StatsTable(shard_rows(num_funcs, shard_id, num_shards))
         self.lock = threading.Lock()
         self.n_pushes = 0
+        # Dirty-row bookkeeping for the federation's incremental aggregate
+        # refresh: every row a push touches since the last delta peek.
+        self._dirty = np.zeros(self.stats.num_funcs, bool)
+
+    def _grow_locked(self, num_rows: int) -> None:
+        self.stats.grow(num_rows)
+        if self.stats.num_funcs > len(self._dirty):
+            grown = np.zeros(self.stats.num_funcs, bool)
+            grown[: len(self._dirty)] = self._dirty
+            self._dirty = grown
 
     def push(self, rows: np.ndarray) -> None:
         """Merge a (rows_s, 7) delta block (already shard-local rows)."""
         with self.lock:
             if rows.shape[0] > self.stats.num_funcs:
-                self.stats.grow(rows.shape[0])
+                self._grow_locked(rows.shape[0])
             self.stats.merge_array(pad_table(rows, self.stats.num_funcs))
+            self._dirty[np.nonzero(rows[:, N] > 0)[0]] = True
             self.n_pushes += 1
 
     def push_rows(self, idx: np.ndarray, rows: np.ndarray, rows_total: int) -> None:
@@ -188,9 +199,10 @@ class PSShard:
         """
         with self.lock:
             if rows_total > self.stats.num_funcs:
-                self.stats.grow(rows_total)
+                self._grow_locked(rows_total)
             table = self.stats.table
             table[idx] = merge_moments(table[idx], rows)
+            self._dirty[idx] = True
             self.n_pushes += 1
 
     def peek_table_locked(self) -> np.ndarray:
@@ -199,9 +211,27 @@ class PSShard:
         with self.lock:
             return self.stats.table.copy()
 
+    def peek_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Dirty-row delta peek: ``(idx, rows)`` of every shard-local row a
+        push touched since the previous :meth:`peek_rows`, then reset.
+
+        This is the federation's incremental aggregate-refresh read: the
+        shard knows exactly which rows changed, so refresh cost (wire bytes
+        and scatter work) is O(changed), not O(F/S) — while staying
+        bit-identical to a full :meth:`peek_table` stitch, because an
+        untouched row cannot have changed since the value the aggregate
+        already holds for it.  One consumer owns the dirty set (the
+        federation front-end); full peeks don't reset it.
+        """
+        with self.lock:
+            idx = np.nonzero(self._dirty)[0]
+            rows = self.stats.table[idx]  # fancy indexing: already a copy
+            self._dirty[idx] = False
+            return idx, rows
+
     def grow(self, num_rows: int) -> None:
         with self.lock:
-            self.stats.grow(num_rows)
+            self._grow_locked(num_rows)
 
     def peek_table(self) -> np.ndarray:
         """Lock-free read of the current shard table (atomic ref load)."""
@@ -236,9 +266,19 @@ class FederatedPS(AnomalyFeed):
     stay exact without barriers because the server executes a connection's
     requests in order, so a ``peek_table`` response reflects every push
     that preceded it; write errors surface loudly on the next push or on
-    :meth:`close`.  ``io_mode="sync"`` restores the PR 3
-    wait-per-update behavior (one release of rollback, and the measured
-    baseline in ``benchmarks/bench_net_federation.py``).
+    :meth:`close`.  (The PR 3 ``io_mode="sync"`` wait-per-update fallback
+    is gone; its measured numbers are frozen in ``BENCH_net.json`` as the
+    permanent benchmark denominator.)
+
+    The periodic aggregate refresh is *incremental*: each shard serves a
+    dirty-row delta peek (:meth:`PSShard.peek_rows` / ``ps.peek_rows``) of
+    only the rows pushes touched since the previous refresh, and the
+    front-end scatters those rows over a copy of the cached aggregate —
+    O(changed) wire bytes and scatter work instead of shipping every
+    shard's full table, and bit-identical to the full stitch (an untouched
+    row cannot differ from the value the aggregate already holds).
+    ``snapshot()`` still does the full-peek stitch, so tests can bit-match
+    the incremental cache against it.
     """
 
     def __init__(
@@ -248,13 +288,10 @@ class FederatedPS(AnomalyFeed):
         aggregate_every: int = 16,
         transport: str = "local",
         endpoints=None,
-        io_mode: str = "async",
     ):
         super().__init__()
         if transport not in ("local", "socket"):
             raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
-        if io_mode not in ("async", "sync"):
-            raise ValueError(f"io_mode must be 'async' or 'sync', got {io_mode!r}")
         if transport == "socket":
             if not endpoints:
                 raise ValueError("transport='socket' requires endpoints")
@@ -268,7 +305,6 @@ class FederatedPS(AnomalyFeed):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self.transport = transport
-        self.io_mode = io_mode
         self.num_shards = num_shards
         self._num_funcs = num_funcs
         if transport == "local":
@@ -276,9 +312,14 @@ class FederatedPS(AnomalyFeed):
         self._aggregate_every = max(int(aggregate_every), 1)
         self._size_lock = threading.Lock()  # guards _num_funcs growth
         self._count_lock = threading.Lock()  # guards n_updates / refresh decision
+        # Serializes delta-peek refreshes: the dirty sets are consumed, so
+        # two concurrent refreshes must not interleave (one would publish
+        # an aggregate missing the rows the other consumed).
+        self._refresh_lock = threading.Lock()
+        self._refresh_full = False  # a failed delta refresh consumed dirty
+        # state it never published: rebuild from full peeks next time
         self.n_updates = 0
         self._agg_at = 0  # n_updates value the cached aggregate reflects
-        self._refresh_gen = 0  # guards against stale refreshes publishing
         self._agg = empty_table(num_funcs)  # cached global snapshot (COW ref)
 
     # --------------------------------------------------------------- sizing
@@ -308,7 +349,7 @@ class FederatedPS(AnomalyFeed):
         # or frame.
         nz = np.nonzero(delta[:, N] > 0)[0]
         touched = np.unique(nz % S) if S > 1 else (0,)
-        if self.transport == "socket" and self.io_mode == "async":
+        if self.transport == "socket":
             # Fire-and-forget: one sparse-row frame per touched shard, no
             # response wait — the merge happens in the worker while this
             # rank moves on, and the frame rides the client's send buffer
@@ -323,17 +364,6 @@ class FederatedPS(AnomalyFeed):
                 shard.push_sparse_nowait(
                     g // S, delta[g], shard_rows(delta.shape[0], s, S)
                 )
-        elif self.transport == "socket":
-            # PR 3 behavior: pipeline one push per touched shard, wait all —
-            # kept as the io_mode="sync" fallback / benchmark baseline.
-            inflight = []
-            for s in touched:
-                shard = self.shards[s]
-                rows = delta[shard.shard_id :: S]
-                if rows.shape[0]:
-                    inflight.append((shard, shard.push_async(rows)))
-            for shard, fut in inflight:
-                shard.finish(fut)
         else:
             for s in touched:
                 shard = self.shards[s]
@@ -352,7 +382,13 @@ class FederatedPS(AnomalyFeed):
         # Pad at read time: clients copy the snapshot over their global view
         # and index it by fid, so it must never have fewer rows than the
         # delta they just pushed (the cached aggregate may predate a grow).
-        return pad_table(self._agg, self._num_funcs)
+        # Returned read-only: the incremental refresh scatters only dirty
+        # rows over this cached array's copy, so a caller writing into the
+        # returned snapshot would poison every future aggregate (full
+        # rebuilds used to heal that; delta refreshes never would).
+        out = pad_table(self._agg, self._num_funcs).view()
+        out.flags.writeable = False
+        return out
 
     # ---------------------------------------------------------- aggregation
     def _build_aggregate(self) -> np.ndarray:
@@ -374,15 +410,51 @@ class FederatedPS(AnomalyFeed):
         return assemble_shards(tables, self._num_funcs)
 
     def _refresh_aggregate(self) -> None:
-        with self._count_lock:
-            self._refresh_gen += 1
-            gen = self._refresh_gen
-        agg = self._build_aggregate()
-        with self._count_lock:
-            # Only publish if no newer refresh started meanwhile — a slow
-            # older pass must not overwrite a fresher aggregate.
-            if gen == self._refresh_gen:
-                self._agg = agg  # atomic ref swap; readers never see torn state
+        """Incremental aggregate refresh: dirty-row delta peeks.
+
+        Each shard returns only the rows its pushes touched since the last
+        refresh (O(changed) wire bytes + scatter work, the ROADMAP item);
+        scattering them over a copy of the cached aggregate is bit-identical
+        to the full ``assemble_shards`` stitch because assembly is a pure
+        interleave and untouched rows cannot have changed.  Copy-on-write
+        keeps published aggregates immutable for readers.  Refreshes are
+        serialized (the peeks *consume* dirty state); a refresh that finds
+        one already running simply skips — its rows stay dirty and land in
+        the next one.
+        """
+        if not self._refresh_lock.acquire(blocking=False):
+            return
+        try:
+            if self._refresh_full:
+                # A previous delta refresh failed after consuming some
+                # shards' dirty state without publishing; a delta peek now
+                # would silently omit those rows forever.  One stateless
+                # full-peek rebuild restores the bit-match (leftover dirty
+                # bits only cause harmless over-inclusion later).
+                self._agg = self._build_aggregate()
+                self._refresh_full = False
+                return
+            S = self.num_shards
+            try:
+                if self.transport == "socket":
+                    futs = [(shard, shard.peek_rows_async()) for shard in self.shards]
+                    parts = [shard.finish_peek_rows(fut) for shard, fut in futs]
+                else:
+                    parts = [shard.peek_rows() for shard in self.shards]
+                F = self._num_funcs
+                for s, (idx, _rows) in enumerate(parts):
+                    if len(idx):  # a shard may have grown past our size read
+                        F = max(F, int(idx[-1]) * S + s + 1)
+                agg = pad_table(self._agg, F).copy()
+                for s, (idx, rows) in enumerate(parts):
+                    if len(idx):
+                        agg[idx * S + s] = rows
+            except BaseException:
+                self._refresh_full = True  # dirty state may be half-consumed
+                raise
+            self._agg = agg  # atomic ref swap; readers never see torn state
+        finally:
+            self._refresh_lock.release()
 
     def snapshot(self) -> StatsTable:
         """Force a fresh aggregation and return it (offline/exact path)."""

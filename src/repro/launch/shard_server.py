@@ -32,7 +32,7 @@ import multiprocessing
 import sys
 from typing import List, Optional, Sequence, Tuple
 
-from repro.net.server import RPCServer, ThreadedRPCServer
+from repro.net.server import RPCServer
 from repro.net.shards import build_shard_table
 
 Endpoint = Tuple[str, int]
@@ -58,14 +58,11 @@ def format_endpoints(endpoints: Sequence[Endpoint]) -> str:
     return ",".join(f"{h}:{p}" for h, p in endpoints)
 
 
-def _worker_main(kind: str, host: str, port: int, conn, threaded: bool = False) -> None:
+def _worker_main(kind: str, host: str, port: int, conn) -> None:
     """Worker-process body: build one shard server, report its endpoint,
     serve until killed.  Kept import-light (numpy only — no jax) so spawned
-    workers start fast and never trip accelerator probing.  ``threaded``
-    selects the legacy thread-per-connection server (one release of
-    fallback); the default is the event-loop server."""
-    cls = ThreadedRPCServer if threaded else RPCServer
-    server = cls(build_shard_table(kind), host=host, port=port)
+    workers start fast and never trip accelerator probing."""
+    server = RPCServer(build_shard_table(kind), host=host, port=port)
     server.start()
     conn.send(server.endpoint)
     conn.close()
@@ -83,7 +80,6 @@ class ShardServerPool:
         start_method: str = "spawn",
         spawn_timeout: float = 60.0,
         port_base: int = 0,
-        threaded: bool = False,
     ):
         ctx = multiprocessing.get_context(start_method)
         self.procs: List[multiprocessing.Process] = []
@@ -94,7 +90,7 @@ class ShardServerPool:
                 port = 0 if port_base == 0 else port_base + i
                 p = ctx.Process(
                     target=_worker_main,
-                    args=(kind, host, port, child, threaded),
+                    args=(kind, host, port, child),
                     daemon=True,
                 )
                 p.start()
@@ -140,11 +136,9 @@ class LocalShardHost:
         num_shards: int,
         kind: str = "both",
         host: str = "127.0.0.1",
-        threaded: bool = False,
     ):
-        cls = ThreadedRPCServer if threaded else RPCServer
         self.servers = [
-            cls(build_shard_table(kind), host=host).start()
+            RPCServer(build_shard_table(kind), host=host).start()
             for _ in range(num_shards)
         ]
         self.endpoints: List[Endpoint] = [s.endpoint for s in self.servers]
@@ -186,15 +180,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         "--port-base", type=int, default=0,
         help="first port (consecutive ports for the rest); 0 = OS-assigned",
     )
-    ap.add_argument(
-        "--threaded", action="store_true",
-        help="serve with the legacy thread-per-connection server instead of "
-        "the event loop (fallback for one release)",
-    )
     args = ap.parse_args(argv)
     pool = ShardServerPool(
         args.shards, kind=args.kind, host=args.host, port_base=args.port_base,
-        threaded=args.threaded,
     )
     print(format_endpoints(pool.endpoints), flush=True)
     try:

@@ -50,6 +50,7 @@ def train(
     ps_transport: str = "local",
     provdb_transport: str = "local",
     shard_endpoints: Optional[str] = None,
+    export_trace: bool = False,
 ) -> Dict:
     cfg = configs.smoke(arch) if smoke else configs.get_config(arch)
     ctx = make_shard_ctx(cfg, None, global_batch, opts)
@@ -83,6 +84,12 @@ def train(
         # On a checkpoint resume the provenance store appends instead of
         # truncating, so the elastic/auto-restart path keeps every pre-failure
         # anomaly record.
+        if monitor_dir:
+            os.makedirs(monitor_dir, exist_ok=True)
+        # With a monitor dir the reduced record stream persists alongside the
+        # provenance JSONL, so `python -m repro.export <monitor_dir>` can
+        # produce the Perfetto trace offline; --export-trace additionally
+        # streams trace.json continuously *during* the run.
         monitor = ChimbukoMonitor(
             num_funcs=32,
             prov_path=os.path.join(monitor_dir, "provenance.jsonl") if monitor_dir else None,
@@ -93,6 +100,11 @@ def train(
             ps_transport=ps_transport,
             provdb_transport=provdb_transport,
             shard_endpoints=endpoints,
+            stream_path=os.path.join(monitor_dir, "stream.jsonl") if monitor_dir else None,
+            export_trace=(
+                os.path.join(monitor_dir, "trace.json")
+                if export_trace and monitor_dir else None
+            ),
         )
         monitor.on_straggler(
             lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
@@ -165,8 +177,15 @@ def main():
         help="shard_server workers as host:port,... — or spawn:N to spawn a "
         "local worker pool for this run (required with a socket transport)",
     )
+    ap.add_argument(
+        "--export-trace", action="store_true",
+        help="continuously write <monitor-dir>/trace.json (Chrome Trace "
+        "Event JSON, openable in ui.perfetto.dev) during the run",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.export_trace and not args.monitor_dir:
+        ap.error("--export-trace needs --monitor-dir (trace.json lives there)")
 
     kw = dict(
         arch=args.arch, smoke=args.smoke, steps=args.steps,
@@ -176,6 +195,7 @@ def main():
         provdb_shards=args.provdb_shards,
         ps_transport=args.ps_transport, provdb_transport=args.provdb_transport,
         shard_endpoints=args.shard_endpoints,
+        export_trace=args.export_trace,
     )
     if args.auto_restart:
         attempts = 0

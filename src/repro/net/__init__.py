@@ -3,8 +3,7 @@ of process (ROADMAP: cross-node PS / cross-process provenance shards).
 
 Layers: :mod:`framing` (length-prefixed binary frames: raw ndarray bytes +
 a compact JSON envelope), :mod:`server` (selectors-based event-loop socket
-server over a registered method table, plus the legacy
-:class:`ThreadedRPCServer` fallback), :mod:`client` (reconnecting,
+server over a registered method table), :mod:`client` (reconnecting,
 request-id-multiplexed async client with per-call timeouts and typed
 errors), :mod:`shards` (PS / provenance shard services and the remote
 stubs the federations consume).  See ``docs/net.md`` for the wire format
@@ -21,7 +20,7 @@ from .framing import (
     encode_frame,
 )
 from .client import RPCClient
-from .server import MethodTable, RPCServer, ThreadedRPCServer
+from .server import MethodTable, RPCServer
 from .shards import (
     PSShardService,
     ProvenanceShardService,
@@ -41,7 +40,6 @@ __all__ = [
     "RPCClient",
     "RPCError",
     "RPCServer",
-    "ThreadedRPCServer",
     "RemoteError",
     "RemotePSShard",
     "RemoteProvenanceShard",

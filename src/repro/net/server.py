@@ -1,27 +1,23 @@
-"""Socket RPC servers hosting a registered method table.
+"""Socket RPC server hosting a registered method table.
 
-Two implementations share one wire contract (``repro.net.framing``) and one
-:class:`MethodTable`:
+:class:`RPCServer` is a selectors-based **event-loop server**: one IO
+thread owns the listening socket and every connection.  Sockets are
+non-blocking; each connection carries an incremental
+:class:`~repro.net.framing.FrameDecoder` on the inbound side and a queue of
+partially-written responses on the outbound side, so thousands of
+connections cost file descriptors, not threads.  Handlers registered
+``heavy=True`` (bulk queries, table dumps) are offloaded to a small daemon
+worker pool; everything else — the ``ps.push`` / ``prov.add_many`` hot path
+— runs inline on the loop with zero thread handoffs.  Outbound queues have
+a high/low-watermark: a connection whose peer stops reading is unsubscribed
+from READ until its queue drains (backpressure), so one slow consumer can
+neither wedge the loop nor balloon server memory.
 
-  * :class:`RPCServer` — the default **event-loop server**: one
-    selectors-based IO thread owns the listening socket and every
-    connection.  Sockets are non-blocking; each connection carries an
-    incremental :class:`~repro.net.framing.FrameDecoder` on the inbound
-    side and a queue of partially-written responses on the outbound side,
-    so thousands of connections cost file descriptors, not threads.
-    Handlers registered ``heavy=True`` (bulk queries, table dumps) are
-    offloaded to a small daemon worker pool; everything else — the
-    ``ps.push`` / ``prov.add_many`` hot path — runs inline on the loop with
-    zero thread handoffs.  Outbound queues have a high/low-watermark: a
-    connection whose peer stops reading is unsubscribed from READ until its
-    queue drains (backpressure), so one slow consumer can neither wedge the
-    loop nor balloon server memory.
-  * :class:`ThreadedRPCServer` — the previous thread-per-connection server,
-    kept for one release as a fallback (``repro.launch.shard_server
-    --threaded``) and as the benchmark baseline in
-    ``benchmarks/bench_net_federation.py``.
+(The PR 3/4 thread-per-connection ``ThreadedRPCServer`` fallback is gone;
+its measured throughput survives as the frozen denominator in
+``BENCH_net.json``.)
 
-Both servers preserve the ordering contract multiplexed clients rely on:
+The server preserves the ordering contract multiplexed clients rely on:
 requests of one connection are *executed* strictly in arrival order (a
 heavy handler blocks later requests of its own connection only), so a
 pipelined read observes every write that preceded it on the same
@@ -477,135 +473,3 @@ class RPCServer:
         conn.outq.clear()
         conn.pending.clear()
         conn.out_bytes = 0
-
-
-class ThreadedRPCServer:
-    """Thread-per-connection fallback (the pre-event-loop server).
-
-    Kept for one release behind ``repro.launch.shard_server --threaded`` and
-    as the measured baseline in ``benchmarks/bench_net_federation.py``.
-    Same wire contract and ordering guarantees as :class:`RPCServer`;
-    ``heavy`` registration is ignored (every connection already owns a
-    thread).
-    """
-
-    def __init__(self, table: MethodTable, host: str = "127.0.0.1", port: int = 0):
-        self.table = table
-        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._sock.bind((host, port))
-        self._sock.listen(128)
-        self._host = host
-        self._port = self._sock.getsockname()[1]
-        self._accept_thread: Optional[threading.Thread] = None
-        self._conns_lock = threading.Lock()
-        self._conns: Dict[int, socket.socket] = {}
-        self._next_conn = 0
-        self._stopping = threading.Event()
-
-    # ------------------------------------------------------------- lifecycle
-    @property
-    def endpoint(self) -> Tuple[str, int]:
-        return (self._host, self._port)
-
-    def start(self) -> "ThreadedRPCServer":
-        self._accept_thread = threading.Thread(
-            target=self._accept_loop, name=f"rpc-accept:{self._port}", daemon=True
-        )
-        self._accept_thread.start()
-        return self
-
-    def serve_forever(self) -> None:
-        if self._accept_thread is None:
-            self.start()
-        self._stopping.wait()
-
-    def stop(self) -> None:
-        self._stopping.set()
-        # Waking a blocked accept() is kernel-dependent: close() alone may
-        # leave the syscall (and thus the listening socket) alive because the
-        # in-flight accept holds a reference to the fd.  Shut the listener
-        # down first, then poke it with a throwaway connection so the accept
-        # thread observes _stopping even where shutdown() is a no-op.
-        try:
-            self._sock.shutdown(socket.SHUT_RDWR)
-        except OSError:
-            pass
-        try:
-            poke = socket.create_connection((self._host, self._port), timeout=1)
-            poke.close()
-        except OSError:
-            pass
-        try:
-            self._sock.close()
-        except OSError:
-            pass
-        with self._conns_lock:
-            conns = list(self._conns.values())
-            self._conns.clear()
-        for c in conns:
-            RPCServer._force_close(c)
-        if self._accept_thread is not None:
-            self._accept_thread.join(timeout=5)
-
-    # ---------------------------------------------------------------- inner
-    def _accept_loop(self) -> None:
-        while not self._stopping.is_set():
-            try:
-                conn, _addr = self._sock.accept()
-            except OSError:
-                return  # listening socket closed by stop()
-            if self._stopping.is_set():
-                try:
-                    conn.close()  # stop()'s wake-up poke, not a real client
-                except OSError:
-                    pass
-                return
-            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            with self._conns_lock:
-                cid = self._next_conn
-                self._next_conn += 1
-                self._conns[cid] = conn
-            threading.Thread(
-                target=self._serve_conn,
-                args=(cid, conn),
-                name=f"rpc-conn:{self._port}:{cid}",
-                daemon=True,
-            ).start()
-
-    def _serve_conn(self, cid: int, conn: socket.socket) -> None:
-        decoder = FrameDecoder()
-        try:
-            while True:
-                try:
-                    data = conn.recv(1 << 20)
-                except OSError:
-                    return
-                if not data:
-                    return  # peer closed; an incomplete frame is its problem
-                try:
-                    frames = decoder.feed(data)
-                except FramingError:
-                    return  # corrupt stream: drop the connection
-                for frame in frames:
-                    if frame.kind != REQUEST:
-                        continue  # only clients originate the other kinds
-                    resolved = _dispatch_light(self.table, frame)
-                    if isinstance(resolved, bytes):
-                        reply = resolved
-                    else:
-                        name, fn, _heavy = resolved
-                        reply = _run_method(name, fn, frame)
-                    if reply is None:
-                        return  # reply unframeable (e.g. over-size): drop conn
-                    try:
-                        conn.sendall(reply)
-                    except OSError:
-                        return
-        finally:
-            with self._conns_lock:
-                self._conns.pop(cid, None)
-            try:
-                conn.close()
-            except OSError:
-                pass

@@ -77,6 +77,7 @@ class PSShardService:
         table.register("ps.push_rows", self._push_rows)
         table.register("ps.grow", self._grow)
         table.register("ps.peek_table", self._peek_table, heavy=True)
+        table.register("ps.peek_rows", self._peek_rows, heavy=True)
         table.register("ps.stats", self._stats)
         return self
 
@@ -110,6 +111,15 @@ class PSShardService:
         # Locked copy: push_rows mutates the table in place, and this
         # handler runs on a worker thread concurrent with inline pushes.
         return {}, (_require(self._shard, "ps").peek_table_locked(),)
+
+    def _peek_rows(self, env, arrays):
+        # Dirty-row delta peek (federation aggregate refresh): ships only
+        # the rows pushes touched since the last peek — O(changed) bytes.
+        # PSShard.peek_rows takes the shard lock, so the worker-thread read
+        # is consistent with inline pushes; connection FIFO guarantees it
+        # reflects every push that preceded it on the caller's connection.
+        idx, rows = _require(self._shard, "ps").peek_rows()
+        return {}, (idx, rows)
 
     def _stats(self, env, arrays):
         shard = _require(self._shard, "ps")
@@ -315,9 +325,9 @@ class RemotePSShard:
         self.finish(self.push_async(rows))
 
     def push_async(self, rows: np.ndarray) -> concurrent.futures.Future:
-        """Pipeline a dense push; pair with :meth:`finish`.  (The PR 3
-        one-in-flight-per-shard path, kept as the ``io_mode="sync"``
-        fallback and for API compatibility.)"""
+        """Pipeline a dense push; pair with :meth:`finish`.  (Kept for API
+        parity with the local shard surface; the federation's hot path is
+        :meth:`push_sparse_nowait`.)"""
         return self._client.call_async(
             "ps.push", arrays=(np.ascontiguousarray(rows, dtype=np.float64),)
         )
@@ -375,6 +385,20 @@ class RemotePSShard:
     def finish_peek(self, fut: concurrent.futures.Future) -> np.ndarray:
         """Resolve a :meth:`peek_table_async` future to its table."""
         return self._client.wait(fut)[1][0]
+
+    def peek_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Dirty-row delta peek (see :meth:`PSShard.peek_rows`)."""
+        return self.finish_peek_rows(self.peek_rows_async())
+
+    def peek_rows_async(self) -> concurrent.futures.Future:
+        return self._client.call_async("ps.peek_rows")
+
+    def finish_peek_rows(
+        self, fut: concurrent.futures.Future
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Resolve a :meth:`peek_rows_async` future to its (idx, rows)."""
+        _env, arrays = self._client.wait(fut)
+        return arrays[0].astype(np.int64, copy=False), arrays[1]
 
     @property
     def n_pushes(self) -> int:

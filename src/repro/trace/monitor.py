@@ -53,6 +53,8 @@ class ChimbukoMonitor:
         ps_transport: str = "local",
         provdb_transport: str = "local",
         shard_endpoints: Optional[list] = None,
+        export_trace: Optional[str] = None,
+        stream_path: Optional[str] = None,
     ):
         self.registry = registry or FunctionRegistry()
         # PS federation (paper §III-B2): with ps_shards > 1 the stats table
@@ -103,6 +105,23 @@ class ChimbukoMonitor:
             )
         # reduced record store: what the on-node modules write for the viz
         self.kept: Dict[Tuple[int, int], np.ndarray] = {}
+        # per-frame export metadata: (ts, n_records, n_anomalies) and the
+        # (kept_idx, prov_seq, severity) anomaly links — what the Perfetto
+        # exporter (repro.export) and the VizServer /trace endpoint replay.
+        self.frame_meta: Dict[Tuple[int, int], Tuple[Optional[int], int, int]] = {}
+        self.anom_meta: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
+        # continuous during-run export: a live Chrome-trace writer and/or a
+        # persisted reduced record stream for offline `python -m repro.export`
+        self._trace_writer = None
+        self._stream_writer = None
+        if export_trace:
+            from repro.export.chrome_trace import ChromeTraceWriter
+
+            self._trace_writer = ChromeTraceWriter(path=export_trace)
+        if stream_path:
+            from repro.export.record_stream import RecordStreamWriter
+
+            self._stream_writer = RecordStreamWriter(stream_path)
         # straggler detection state
         self._stime = RunningStats()
         self._s_alpha = straggler_alpha
@@ -130,10 +149,32 @@ class ChimbukoMonitor:
         """Full in-situ path for one rank-frame."""
         res = self._ad(frame.rank).process_frame(frame)
         kept_idx = self.reducers[frame.rank].reduce(res)
-        self.kept[(frame.rank, frame.step)] = res.records[kept_idx]
+        kept = res.records[kept_idx]
+        self.kept[(frame.rank, frame.step)] = kept
         self.ps.report_anomalies(frame.rank, frame.step, res.n_anomalies)
+        anom: List[Tuple[int, int, int]] = []
         if res.n_anomalies:
             self.provdb.ingest(res, frame.comm_events)
+            # Link each anomalous kept record to the provenance doc it just
+            # produced (anomalies are always kept, so the searchsorted map
+            # is total).  (kept_idx, global seq, severity) triples feed the
+            # trace exporter's instant events.
+            kpos = np.searchsorted(kept_idx, res.anomaly_idx)
+            anom = [
+                (int(k), int(seq), int(sev))
+                for k, (seq, sev) in zip(kpos, self.provdb.last_ingest)
+            ]
+        ts = int(res.records["exit"].max()) if len(res.records) else None
+        key = (frame.rank, frame.step)
+        self.frame_meta[key] = (ts, len(res.records), res.n_anomalies)
+        self.anom_meta[key] = anom
+        for writer in (self._stream_writer, self._trace_writer):
+            if writer is not None:
+                writer.add_frame(
+                    frame.rank, frame.step, kept, self.registry.names,
+                    anomalies=anom, n_records=len(res.records),
+                    n_anomalies=res.n_anomalies, ts=ts,
+                )
         return res
 
     # ---------------------------------------------------------- stragglers
@@ -194,5 +235,11 @@ class ChimbukoMonitor:
     def close(self) -> None:
         self.flush_ps()
         self.provdb.close()
+        if self._trace_writer is not None:
+            self._trace_writer.close()
+            self._trace_writer = None
+        if self._stream_writer is not None:
+            self._stream_writer.close()
+            self._stream_writer = None
         if isinstance(self.ps, FederatedPS):
             self.ps.close()

@@ -12,6 +12,8 @@ below).  A JSON dump stands in for the websocket broadcast.
   call_stack_view   Fig. 6: call stack around an anomaly with comm arrows
   provenance_view   §V: raw provenance docs for a (rank, fid, step, window)
                     query, served through the (possibly sharded) provenance DB
+  trace             the reduced record stream as a Perfetto-openable Chrome
+                    trace (repro.export) — fetchable from a running job
 
 JSON schemas for all endpoints (and which paper figure each
 reproduces) are documented in docs/viz.md.  The endpoints are agnostic to
@@ -156,6 +158,41 @@ class VizServer:
         }
 
     # ------------------------------------------------------------- export
+    def trace(self, path: Optional[str] = None) -> bytes:
+        """``/trace`` endpoint: the monitor's reduced record stream as a
+        Perfetto-openable Chrome trace (docs/export.md).
+
+        Streams the monitor's in-memory state (kept records + anomaly →
+        provenance-doc links) through the same writer the live
+        ``export_trace=`` path and the offline ``python -m repro.export``
+        CLI drive, in the same ingestion order — so a browser fetching this
+        from a running job gets byte-for-byte the file the finished run
+        would export.  Returns the bytes; also writes them to ``path`` when
+        given.
+        """
+        import io as _io
+
+        from repro.export.chrome_trace import ChromeTraceWriter
+
+        buf = _io.StringIO()
+        writer = ChromeTraceWriter(out=buf)
+        names = self.monitor.registry.names
+        for (rank, step), kept in self.monitor.kept.items():
+            ts, n_records, n_anoms = self.monitor.frame_meta.get(
+                (rank, step), (None, len(kept), 0)
+            )
+            writer.add_frame(
+                rank, step, kept, names,
+                anomalies=self.monitor.anom_meta.get((rank, step), ()),
+                n_records=n_records, n_anomalies=n_anoms, ts=ts,
+            )
+        writer.close()
+        data = buf.getvalue().encode("utf-8")
+        if path:
+            with open(path, "wb") as f:
+                f.write(data)
+        return data
+
     def dump(self, path: str, ranks: Optional[List[int]] = None) -> None:
         ranks = ranks if ranks is not None else sorted(self.monitor.ads.keys())
         doc = {

@@ -1,0 +1,362 @@
+"""repro.export: schema lock, stack well-formedness, topology equivalence."""
+import gzip
+import io
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.events import empty_exec_records
+from repro.core.sim import WorkloadGenerator, nwchem_like
+from repro.export.chrome_trace import ChromeTraceWriter, validate_trace
+from repro.export.cli import main as export_main
+from repro.export.provenance_export import (
+    load_provenance_docs,
+    render_provenance_trace,
+)
+from repro.export.record_stream import export_stream, iter_stream_frames
+from repro.trace.monitor import ChimbukoMonitor
+from repro.viz.server import VizServer
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_trace.json")
+
+
+# ----------------------------------------------------------------- helpers
+def _recs(rows, rank=0, tid=0):
+    """(fid, entry, exit, depth[, label]) rows -> EXEC_RECORD_DTYPE array."""
+    out = empty_exec_records(len(rows))
+    for i, row in enumerate(rows):
+        fid, entry, exit_, depth = row[:4]
+        out["fid"][i], out["entry"][i], out["exit"][i] = fid, entry, exit_
+        out["runtime"][i] = exit_ - entry
+        out["depth"][i] = depth
+        out["label"][i] = row[4] if len(row) > 4 else 0
+    out["rank"] = rank
+    out["tid"] = tid
+    return out
+
+
+def golden_trace_bytes() -> bytes:
+    """A tiny fixed trace exercising every event family (the schema lock)."""
+    buf = io.StringIO()
+    w = ChromeTraceWriter(out=buf)
+    names = {1: "main", 2: "solve", 3: "io"}
+    # frame 0 (completed calls only; their parent `main` is still open):
+    # solve(10..40, anomalous), io(50..90){io(60..70)}
+    w.add_frame(
+        0, 0,
+        _recs([(2, 10, 40, 2, 1), (3, 60, 70, 3), (3, 50, 90, 2)]),
+        names, anomalies=[(0, 7, 4)], n_records=5, n_anomalies=1, ts=90,
+    )
+    # frame 1, same track: solve(120..140) plus `main`(0..150), the parent
+    # carried open across the frame boundary — its descendants already
+    # exported (entry 0 < the track's high-water mark), so it degrades to
+    # an async fallback pair instead of retro-breaking thread nesting.
+    w.add_frame(
+        0, 1,
+        _recs([(2, 120, 140, 2), (1, 0, 150, 1)]),
+        names, n_records=2, n_anomalies=0, ts=150,
+    )
+    # another rank/tid: independent track
+    w.add_frame(1, 0, _recs([(2, 30, 60, 1)], rank=1, tid=9), names,
+                n_records=1, n_anomalies=0, ts=60)
+    w.close()
+    return buf.getvalue().encode("utf-8")
+
+
+def _run_monitor(td, n_ranks=4, steps=10, seed=3, **monitor_kw):
+    """Drive a deterministic workload through a monitor with export wired."""
+    spec = nwchem_like(anomaly_rate=0.02)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 40.0
+    gen = WorkloadGenerator(spec, n_ranks=n_ranks, seed=seed)
+    monitor = ChimbukoMonitor(
+        num_funcs=len(gen.registry), registry=gen.registry, min_samples=20,
+        prov_path=os.path.join(td, "provenance.jsonl"),
+        stream_path=os.path.join(td, "stream.jsonl"),
+        run_info={"timestamp": 0.0},
+        **monitor_kw,
+    )
+    for step in range(steps):
+        for rank in range(n_ranks):
+            frame, _ = gen.frame(rank, step)
+            monitor.ingest(frame)
+    return monitor
+
+
+def _offline_bytes(td) -> bytes:
+    buf = io.StringIO()
+    export_stream(os.path.join(td, "stream.jsonl"), out=buf)
+    return buf.getvalue().encode("utf-8")
+
+
+# ------------------------------------------------------------- golden file
+def test_golden_trace_locked():
+    """Byte-deterministic output, locked against the committed golden file.
+
+    A diff here means the export schema changed: regenerate tests/data/
+    golden_trace.json deliberately (see this test) and document the change
+    in docs/export.md.
+    """
+    data = golden_trace_bytes()
+    assert data == golden_trace_bytes()  # deterministic across invocations
+    with open(GOLDEN, "rb") as f:
+        assert data == f.read()
+
+
+def test_golden_trace_contents():
+    doc = json.loads(golden_trace_bytes())
+    counts = validate_trace(doc)
+    assert counts["durations"] == 5  # 4 on track (0,0) + 1 on (1,9)
+    assert counts["async"] == 1  # the carried-open parent
+    assert counts["instants"] == 1
+    assert counts["counters"] == 3
+    inst = [e for e in doc["traceEvents"] if e["ph"] == "i"][0]
+    assert inst["args"]["prov_seq"] == 7
+    assert inst["args"]["severity"] == 4
+    assert inst["args"]["func"] == "solve"
+    assert inst["cname"] == "bad"
+    # B/E reconstruct the call-stack nesting: outer io opens before inner io
+    track0 = [e for e in doc["traceEvents"]
+              if e.get("pid") == 0 and e["ph"] in "BE"]
+    assert [(e["ph"], e["name"]) for e in track0[:4]] == [
+        ("B", "solve"), ("E", "solve"), ("B", "io"), ("B", "io")]
+
+
+def test_validator_rejects_malformed():
+    base = {"traceEvents": [
+        {"ph": "B", "pid": 0, "tid": 0, "name": "f", "ts": 1, "args": {}}]}
+    with pytest.raises(ValueError, match="unbalanced"):
+        validate_trace(base)
+    bad_order = {"traceEvents": [
+        {"ph": "B", "pid": 0, "tid": 0, "name": "f", "ts": 5, "args": {}},
+        {"ph": "E", "pid": 0, "tid": 0, "name": "f", "ts": 9},
+        {"ph": "B", "pid": 0, "tid": 0, "name": "g", "ts": 3, "args": {}},
+        {"ph": "E", "pid": 0, "tid": 0, "name": "g", "ts": 4},
+    ]}
+    with pytest.raises(ValueError, match="regressed"):
+        validate_trace(bad_order)
+    with pytest.raises(ValueError, match="name"):
+        validate_trace({"traceEvents": [
+            {"ph": "B", "pid": 0, "tid": 0, "name": "f", "ts": 1, "args": {}},
+            {"ph": "E", "pid": 0, "tid": 0, "name": "g", "ts": 2}]})
+
+
+# ------------------------------------------------- stack well-formedness
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_stack_wellformed_fuzz(seed, tmp_path):
+    """Every B has a matching E, nesting valid, on real AD output streams."""
+    monitor = _run_monitor(str(tmp_path), n_ranks=3, steps=10, seed=seed)
+    n_kept = sum(len(v) for v in monitor.kept.values())
+    monitor.close()
+    counts = validate_trace(json.loads(_offline_bytes(str(tmp_path))))
+    if n_kept:
+        assert counts["durations"] + counts["async"] == n_kept
+    # every anomaly the monitor kept shows up as an instant with a doc link
+    assert counts["instants"] == sum(
+        len(v) for v in monitor.anom_meta.values())
+
+
+def test_carried_open_call_degrades_to_async():
+    """A call completing frames after its descendants exported must not
+    retro-break thread nesting: it rides the async rail instead."""
+    buf = io.StringIO()
+    w = ChromeTraceWriter(out=buf)
+    w.add_frame(0, 0, _recs([(2, 10, 20, 2)]), {1: "root", 2: "leaf"})
+    w.add_frame(0, 1, _recs([(1, 0, 50, 1)]), {1: "root", 2: "leaf"})
+    w.close()
+    doc = json.loads(buf.getvalue())
+    counts = validate_trace(doc)
+    assert counts["durations"] == 1 and counts["async"] == 1
+    a = [e for e in doc["traceEvents"] if e["ph"] == "b"][0]
+    assert a["name"] == "root" and a["cat"] == "carried" and a["ts"] == 0
+
+
+# ------------------------------------------------- topology equivalence
+def test_export_identical_across_shard_counts_and_transports(tmp_path):
+    """Acceptance: byte-identical trace for the same logical run at
+    S ∈ {1, 2, 4} local and S=2 over the socket transport."""
+    variants = {}
+    for S in (1, 2, 4):
+        td = str(tmp_path / f"s{S}")
+        os.makedirs(td)
+        monitor = _run_monitor(td, provdb_shards=S)
+        monitor.close()
+        variants[f"local{S}"] = (td, _offline_bytes(td))
+    td = str(tmp_path / "sock2")
+    os.makedirs(td)
+    from repro.launch.shard_server import LocalShardHost
+
+    with LocalShardHost(2, kind="prov") as host:
+        monitor = _run_monitor(td, provdb_transport="socket",
+                               shard_endpoints=host.endpoints)
+        monitor.provdb.drain()
+        monitor.close()
+    variants["socket2"] = (td, _offline_bytes(td))
+
+    ref_td, ref = variants["local1"]
+    for label, (td, data) in variants.items():
+        assert data == ref, f"{label} trace differs from single-shard local"
+        with open(os.path.join(td, "stream.jsonl"), "rb") as f, \
+                open(os.path.join(ref_td, "stream.jsonl"), "rb") as g:
+            assert f.read() == g.read(), f"{label} stream.jsonl differs"
+    validate_trace(json.loads(ref))
+
+
+def test_live_offline_and_viz_trace_identical(tmp_path):
+    """The during-run writer, the offline CLI replay, and the VizServer
+    /trace endpoint emit the same bytes for the same run."""
+    td = str(tmp_path)
+    monitor = _run_monitor(
+        td, export_trace=os.path.join(td, "trace_live.json"))
+    viz_bytes = VizServer(monitor).trace()
+    monitor.close()
+    with open(os.path.join(td, "trace_live.json"), "rb") as f:
+        live = f.read()
+    offline = _offline_bytes(td)
+    assert live == offline == viz_bytes
+    validate_trace(json.loads(live))
+
+
+# ----------------------------------------------------- provenance windows
+def test_provenance_window_export(tmp_path):
+    monitor = _run_monitor(str(tmp_path), provdb_shards=2)
+    monitor.close()
+    docs = load_provenance_docs(str(tmp_path))
+    assert docs and docs == sorted(docs, key=lambda d: d["seq"])
+    buf = io.StringIO()
+    render_provenance_trace(docs, out=buf)
+    doc = json.loads(buf.getvalue())
+    counts = validate_trace(doc)
+    assert counts["instants"] >= len(docs)  # one anomaly marker per window
+    inst = [e for e in doc["traceEvents"]
+            if e["ph"] == "i" and e["name"] == "anomaly"]
+    assert {e["args"]["prov_seq"] for e in inst} == {d["seq"] for d in docs}
+    # filtered query narrows the windows
+    one = load_provenance_docs(str(tmp_path), rank=docs[0]["rank"])
+    assert one and all(d["rank"] == docs[0]["rank"] for d in one)
+
+
+def test_provenance_export_topology_agnostic(tmp_path):
+    """Same windows bytes whether the docs came from 1 or 4 shard files."""
+    outs = []
+    for S in (1, 4):
+        td = str(tmp_path / f"s{S}")
+        os.makedirs(td)
+        monitor = _run_monitor(td, provdb_shards=S)
+        monitor.close()
+        buf = io.StringIO()
+        render_provenance_trace(load_provenance_docs(td), out=buf)
+        outs.append(buf.getvalue())
+    assert outs[0] == outs[1]
+
+
+# ----------------------------------------------------------------- the CLI
+def test_cli_end_to_end(tmp_path, capsys):
+    td = str(tmp_path)
+    monitor = _run_monitor(td)
+    monitor.close()
+    out = os.path.join(td, "trace.json")
+    assert export_main([td, "-o", out]) == 0
+    with open(out) as f:
+        doc = json.load(f)  # json.load-validates smoke on real output
+    validate_trace(doc)
+    assert export_main(["--validate", out]) == 0
+    assert json.loads(capsys.readouterr().out)["durations"] > 0
+    # gzip output is deterministic and decodes to the same bytes
+    gz1, gz2 = os.path.join(td, "a.json.gz"), os.path.join(td, "b.json.gz")
+    assert export_main([td, "-o", gz1, "--gzip"]) == 0
+    assert export_main([td, "-o", gz2, "--gzip"]) == 0
+    with open(gz1, "rb") as f, open(gz2, "rb") as g:
+        assert f.read() == g.read()
+    with gzip.open(gz1, "rb") as f, open(out, "rb") as g:
+        assert f.read() == g.read()
+    # provenance mode, incl. gzip output under a .json name: validation
+    # sniffs the gzip magic instead of trusting the suffix
+    pout = os.path.join(td, "prov.json")
+    assert export_main([td, "--provenance", "-o", pout]) == 0
+    validate_trace(pout)
+    assert export_main([td, "--provenance", "-o", pout, "--gzip"]) == 0
+    assert export_main(["--validate", pout]) == 0
+
+
+def test_stream_reader_roundtrip(tmp_path):
+    """iter_stream_frames reconstructs the kept records exactly."""
+    td = str(tmp_path)
+    monitor = _run_monitor(td)
+    kept = {k: v.copy() for k, v in monitor.kept.items()}
+    meta = dict(monitor.frame_meta)
+    monitor.close()
+    n = 0
+    for fr in iter_stream_frames(os.path.join(td, "stream.jsonl")):
+        key = (fr["rank"], fr["step"])
+        assert np.array_equal(fr["records"], kept[key])
+        assert (fr["ts"], fr["n_records"], fr["n_anomalies"]) == meta[key]
+        n += 1
+    assert n == len(kept)
+
+
+def test_query_live_endpoints_matches_files(tmp_path):
+    """The --endpoints live path (raw prov.query, no configure) returns the
+    same docs the shard files hold, rendered to the same bytes."""
+    from repro.export.provenance_export import query_live_endpoints
+    from repro.launch.shard_server import LocalShardHost
+
+    td = str(tmp_path)
+    with LocalShardHost(2, kind="prov") as host:
+        monitor = _run_monitor(td, provdb_transport="socket",
+                               shard_endpoints=host.endpoints)
+        monitor.provdb.drain()
+        # query the *running* job's workers, then compare to its own view
+        live = query_live_endpoints(host.endpoints)
+        assert live == monitor.provdb.query()
+        sev = query_live_endpoints(host.endpoints, min_severity=1)
+        assert sev == monitor.provdb.query(min_severity=1)
+        monitor.close()
+    file_docs = load_provenance_docs(td)
+    assert live == file_docs
+    bufs = []
+    for docs in (live, file_docs):
+        buf = io.StringIO()
+        render_provenance_trace(docs, out=buf)
+        bufs.append(buf.getvalue())
+    assert bufs[0] == bufs[1]
+
+
+def test_torn_stream_tail_exports_prefix(tmp_path):
+    """A stream.jsonl cut mid-line (killed run) replays its complete prefix."""
+    td = str(tmp_path)
+    monitor = _run_monitor(td)
+    monitor.close()
+    path = os.path.join(td, "stream.jsonl")
+    whole = list(iter_stream_frames(path))
+    with open(path, "rb") as f:
+        data = f.read()
+    lines = data.splitlines(keepends=True)
+    with open(path, "wb") as f:
+        f.writelines(lines[:-1])
+        f.write(lines[-1][: len(lines[-1]) // 2])  # torn final line
+    torn = list(iter_stream_frames(path))
+    assert len(torn) == len(whole) - 1
+    for a, b in zip(torn, whole):
+        assert np.array_equal(a["records"], b["records"])
+    buf = io.StringIO()
+    export_stream(path, out=buf)  # and the trace still validates
+    validate_trace(json.loads(buf.getvalue()))
+
+
+def test_path_family_handles_shard_in_dirname(tmp_path):
+    """A '.shard' substring in the directory or base name must not
+    truncate the family root."""
+    from repro.export.provenance_export import provenance_path_family
+
+    d = tmp_path / "run.shard_sweep"
+    d.mkdir()
+    (d / "provenance.jsonl").write_text("{}\n")
+    (d / "provenance.shard1.jsonl").write_text("{}\n")
+    fam = provenance_path_family(str(d))
+    assert fam == [str(d / "provenance.jsonl"),
+                   str(d / "provenance.shard1.jsonl")]
+    # shard-file input resolves the same family
+    assert provenance_path_family(str(d / "provenance.shard1.jsonl")) == fam

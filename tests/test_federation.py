@@ -354,3 +354,96 @@ def test_kernel_fid_offset():
         np.testing.assert_allclose(
             np.asarray(d[:, 1]), host.means()[base : base + 8], rtol=1e-4, atol=1e-3
         )
+
+
+# ---------------------------------------------------- incremental refresh
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_incremental_refresh_bitmatches_full_peek(num_shards):
+    """The dirty-row delta-peek aggregate == the full-peek stitch, bitwise.
+
+    `_refresh_aggregate` consumes each shard's dirty rows and scatters them
+    over the cached aggregate; `snapshot()` re-stitches every shard's full
+    table.  They must agree bit-for-bit at every refresh point, including
+    across table growth."""
+    rng = np.random.default_rng(num_shards + 100)
+    F = 23
+    fed = FederatedPS(F, num_shards=num_shards, aggregate_every=10**9)
+    for r, t, d in _random_deltas(rng, n_ranks=4, frames=12, F=F, grow_to=37):
+        fed.update_and_fetch(r, t, d)
+        if rng.integers(0, 3) == 0:
+            fed._refresh_aggregate()
+            full = fed.snapshot().table
+            incr = S.pad_table(fed._agg, full.shape[0])
+            assert np.array_equal(incr, full)
+    fed._refresh_aggregate()
+    assert np.array_equal(S.pad_table(fed._agg, fed.num_funcs), fed.snapshot().table)
+
+
+def test_peek_rows_is_delta_sized():
+    """Refresh reads are O(changed): a delta touching one fid dirties at
+    most one row on one shard, and a peek with no intervening push is
+    empty."""
+    from repro.core.ps import PSShard
+
+    fed = FederatedPS(32, num_shards=4, aggregate_every=10**9)
+    d = S.empty_table(32)
+    d[7] = S.batch_moments(np.asarray([5.0, 6.0]))
+    fed.update_and_fetch(0, 0, d)
+    sizes = [len(sh.peek_rows()[0]) for sh in fed.shards]
+    assert sum(sizes) == 1 and sizes[7 % 4] == 1
+    assert all(len(sh.peek_rows()[0]) == 0 for sh in fed.shards)
+
+    # and the peeked rows carry the merged values for exactly those fids
+    shard = PSShard(0, 1, 8)
+    d2 = S.empty_table(8)
+    d2[3] = S.batch_moments(np.asarray([2.0]))
+    shard.push(d2)
+    idx, rows = shard.peek_rows()
+    assert list(idx) == [3]
+    assert np.array_equal(rows[0], d2[3])
+
+
+def test_incremental_refresh_bitmatches_over_socket():
+    """Same bit-match guarantee when shards answer ps.peek_rows over RPC."""
+    from repro.launch.shard_server import LocalShardHost
+
+    rng = np.random.default_rng(17)
+    F = 19
+    with LocalShardHost(2, kind="ps") as host:
+        fed = FederatedPS(F, transport="socket", endpoints=host.endpoints,
+                          aggregate_every=10**9)
+        try:
+            for r, t, d in _random_deltas(rng, n_ranks=3, frames=8, F=F):
+                fed.update_and_fetch(r, t, d)
+            fed.drain()
+            fed._refresh_aggregate()
+            full = fed.snapshot().table
+            incr = S.pad_table(fed._agg, full.shape[0])
+            assert np.array_equal(incr, full)
+        finally:
+            fed.close()
+
+
+def test_failed_refresh_recovers_with_full_rebuild():
+    """A refresh that dies after consuming some shards' dirty state must
+    not leave the cached aggregate permanently missing those rows: the
+    next refresh rebuilds from full peeks and restores the bit-match."""
+    rng = np.random.default_rng(23)
+    fed = FederatedPS(16, num_shards=2, aggregate_every=10**9)
+    for r, t, d in _random_deltas(rng, n_ranks=2, frames=4, F=16):
+        fed.update_and_fetch(r, t, d)
+    # shard 0's dirty rows get consumed, then shard 1's peek blows up
+    orig = fed.shards[1].peek_rows
+    fed.shards[1].peek_rows = lambda: (_ for _ in ()).throw(OSError("down"))
+    with pytest.raises(OSError):
+        fed._refresh_aggregate()
+    fed.shards[1].peek_rows = orig
+    fed._refresh_aggregate()  # full-peek rebuild
+    assert np.array_equal(S.pad_table(fed._agg, fed.num_funcs),
+                          fed.snapshot().table)
+    # and subsequent delta refreshes keep matching
+    for r, t, d in _random_deltas(rng, n_ranks=2, frames=2, F=16):
+        fed.update_and_fetch(r, t, d)
+    fed._refresh_aggregate()
+    assert np.array_equal(S.pad_table(fed._agg, fed.num_funcs),
+                          fed.snapshot().table)

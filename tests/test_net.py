@@ -20,7 +20,6 @@ from repro.net import (
     RemoteError,
     RPCClient,
     RPCServer,
-    ThreadedRPCServer,
     TruncatedStream,
     encode_frame,
 )
@@ -396,20 +395,6 @@ def test_evloop_inbound_backpressure_behind_heavy_handler():
         futs = [client.call_async("echo", {"i": i}) for i in range(100)]
         client.wait(slow_fut)
         assert [client.wait(f)[0]["i"] for f in futs] == list(range(100))
-        client.close()
-    finally:
-        server.stop()
-
-
-def test_threaded_fallback_server_roundtrip():
-    """The --threaded fallback serves the same wire contract."""
-    server = ThreadedRPCServer(_echo_table()).start()
-    try:
-        client = RPCClient(server.endpoint, timeout=10)
-        futs = [client.call_async("echo", {"i": i}) for i in range(10)]
-        assert [client.wait(f)[0]["i"] for f in futs] == list(range(10))
-        with pytest.raises(RemoteError):
-            client.call("boom")
         client.close()
     finally:
         server.stop()
