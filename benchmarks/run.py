@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   ps_sharding       PS federation update throughput vs shard count (§III-B2)
   provdb_sharding   provenance DB ingest/query throughput vs shard count (§V)
   net_federation    in-process vs socket-worker shard scaling (repro.net)
+  viz_gateway       HTTP view / /trace / WebSocket fan-out serving (§IV)
   kernels           Pallas-vs-XLA micro-benchmarks
   roofline          per-cell roofline terms from the dry-run artifacts
 """
@@ -38,13 +39,14 @@ def main(argv=None) -> None:
         bench_ps_sharding,
         bench_reduction,
         bench_roofline,
+        bench_viz_gateway,
     )
 
     failures = 0
     print("name,us_per_call,derived")
     for mod in (bench_ad_scaling, bench_overhead, bench_reduction,
                 bench_ps_sharding, bench_provdb_sharding,
-                bench_net_federation, bench_kernels,
+                bench_net_federation, bench_viz_gateway, bench_kernels,
                 bench_roofline):
         try:
             if mod is bench_net_federation and args.net_json:

@@ -164,6 +164,21 @@ class ChromeTraceWriter:
         self._emit({"ph": "C", "pid": pid, "tid": 0, "name": name,
                     "ts": int(ts), "args": {k: int(v) for k, v in values.items()}})
 
+    # Flow events (ph "s"/"f"): Perfetto draws an arrow from the start to
+    # the finish — how a SEND on one rank points at its RECV on another.
+    def flow_start(self, pid: int, tid: int, name: str, ts: int, flow_id: int,
+                   args: Optional[Dict[str, Any]] = None) -> None:
+        self._emit({"ph": "s", "cat": "comm", "id": int(flow_id), "pid": pid,
+                    "tid": tid, "name": name, "ts": int(ts), "args": args or {}})
+
+    def flow_finish(self, pid: int, tid: int, name: str, ts: int, flow_id: int,
+                    args: Optional[Dict[str, Any]] = None) -> None:
+        # bp:"e" binds the finish to the enclosing slice (the modern
+        # next-slice semantics confuse Perfetto when the finish is bare).
+        self._emit({"ph": "f", "bp": "e", "cat": "comm", "id": int(flow_id),
+                    "pid": pid, "tid": tid, "name": name, "ts": int(ts),
+                    "args": args or {}})
+
     # ------------------------------------------------------------ frame export
     def add_frame(
         self,
@@ -312,8 +327,10 @@ def validate_trace(source: Union[str, IO[str], Dict[str, Any]]) -> Dict[str, int
     stacks: Dict[Tuple[int, int], List[Tuple[str, int]]] = {}
     last_ts: Dict[Tuple[int, int], int] = {}
     open_async: Dict[Tuple[str, int], int] = {}
+    flow_s: Dict[Tuple[str, int], int] = {}
+    flow_f: Dict[Tuple[str, int], int] = {}
     counts = {"events": len(events), "durations": 0, "instants": 0,
-              "counters": 0, "async": 0, "metadata": 0}
+              "counters": 0, "async": 0, "metadata": 0, "flows": 0}
     for k, e in enumerate(events):
         ph = e.get("ph")
         key = (e.get("pid"), e.get("tid"))
@@ -354,6 +371,17 @@ def validate_trace(source: Union[str, IO[str], Dict[str, Any]]) -> Dict[str, int
                 if ts < open_async.pop(akey):
                     raise ValueError(f"event {k}: async e before its b {akey}")
                 counts["async"] += 1
+        elif ph in ("s", "f"):
+            fkey = (e.get("cat"), e.get("id"))
+            if None in fkey:
+                raise ValueError(f"event {k}: flow event missing cat/id")
+            # File order between the two halves is NOT constrained — a RECV
+            # doc can precede its SEND doc in ingest order — so pairing and
+            # the ts ordering are checked after the full pass.
+            side = flow_s if ph == "s" else flow_f
+            if fkey in side:
+                raise ValueError(f"event {k}: duplicate flow {ph!r} for {fkey}")
+            side[fkey] = ts
         elif ph == "i":
             if e.get("s") not in ("t", "p", "g"):
                 raise ValueError(f"event {k}: instant missing scope")
@@ -374,5 +402,12 @@ def validate_trace(source: Union[str, IO[str], Dict[str, Any]]) -> Dict[str, int
         raise ValueError(f"unbalanced B events on tracks: {sorted(unbalanced)}")
     if open_async:
         raise ValueError(f"unmatched async b events: {sorted(open_async)}")
+    if set(flow_s) != set(flow_f):
+        lone = sorted(set(flow_s).symmetric_difference(flow_f))
+        raise ValueError(f"unpaired flow events: {lone}")
+    for fkey, ts_s in flow_s.items():
+        if flow_f[fkey] < ts_s:
+            raise ValueError(f"flow {fkey}: finish ts precedes start ts")
+    counts["flows"] = len(flow_s)
     counts["tracks"] = len(stacks)
     return counts

@@ -135,6 +135,58 @@ def _doc_records(doc: Dict[str, Any], pad_us: int) -> Tuple[np.ndarray, int, Dic
     return recs, anomaly_row, names, window_end
 
 
+def _pair_comm_flows(
+    docs: Sequence[Dict[str, Any]],
+) -> Dict[Tuple[int, int], Tuple[str, int]]:
+    """Match SEND/RECV comm instants across ranks into Chrome-trace flows.
+
+    Returns ``{(doc_index, comm_index): ("s"|"f", flow_id)}`` — which comm
+    events open/finish a flow arrow.  A SEND on rank A to partner B matches
+    the earliest unmatched RECV on rank B from partner A with the same tag,
+    equal nbytes, and ``recv.ts >= send.ts`` (FIFO channel order — MPI's
+    non-overtaking guarantee for one (src, dst, tag) channel).
+
+    Everything is a pure function of the docs in their global ``seq``
+    order: duplicates (one physical event captured by several overlapping
+    windows) attach the flow to the first occurrence only, and flow ids
+    are assigned in send order — so the emitted trace stays
+    byte-deterministic across shard counts and transports.
+    """
+    sends: Dict[Tuple[int, int, int], List[Tuple[int, int, int, int]]] = {}
+    recvs: Dict[Tuple[int, int, int], List[Tuple[int, int, int, int]]] = {}
+    seen: set = set()
+    for i, doc in enumerate(docs):
+        rank = int(doc["rank"])
+        for j, c in enumerate(doc.get("comm", [])):
+            ctype = int(c.get("ctype", 0))
+            partner, tag = int(c["partner"]), int(c.get("tag", 0))
+            ts, nbytes = int(c["ts"]), int(c["nbytes"])
+            key = (rank, ctype, partner, tag, ts, nbytes, int(c["tid"]))
+            if key in seen:
+                continue  # same physical event in an overlapping window
+            seen.add(key)
+            if ctype == 0:  # SEND: channel is (src=rank, dst=partner, tag)
+                sends.setdefault((rank, partner, tag), []).append((ts, nbytes, i, j))
+            else:  # RECV: the same channel seen from the destination
+                recvs.setdefault((partner, rank, tag), []).append((ts, nbytes, i, j))
+    flows: Dict[Tuple[int, int], Tuple[str, int]] = {}
+    pairs: List[Tuple[Tuple[int, int], Tuple[int, int]]] = []
+    for chan, ss in sends.items():
+        rr = sorted(recvs.get(chan, []))
+        used = [False] * len(rr)
+        for ts, nbytes, i, j in sorted(ss):
+            for k, (rts, rnb, ri, rj) in enumerate(rr):
+                if not used[k] and rts >= ts and rnb == nbytes:
+                    used[k] = True
+                    pairs.append(((i, j), (ri, rj)))
+                    break
+    # Flow ids in send (doc, comm) order: stable however channels iterate.
+    for flow_id, (s_at, f_at) in enumerate(sorted(pairs), start=1):
+        flows[s_at] = ("s", flow_id)
+        flows[f_at] = ("f", flow_id)
+    return flows
+
+
 def render_provenance_trace(
     docs: Sequence[Dict[str, Any]],
     out: Optional[IO[str]] = None,
@@ -146,14 +198,18 @@ def render_provenance_trace(
 
     Each doc renders into its own process group (pid = the doc's global
     ``seq``) so overlapping windows from different anomalies never fight
-    over one thread track.
+    over one thread track.  SEND/RECV comm instants whose counterpart
+    appears in another doc additionally carry flow events (``ph "s"/"f"``,
+    :func:`_pair_comm_flows`), so Perfetto draws the message arrow from
+    the sending rank's window to the receiving rank's.
     """
     writer = ChromeTraceWriter(
         out=out, path=path, gz=gz,
         other_data={"content": "provenance windows", "n_docs": len(docs)},
     )
+    flows = _pair_comm_flows(docs)
     try:
-        for doc in docs:
+        for i, doc in enumerate(docs):
             a = doc["anomaly"]
             seq = int(doc.get("seq", 0))
             severity = int(doc.get("severity", 0))
@@ -167,15 +223,20 @@ def render_provenance_trace(
                 rank=doc["rank"], step=doc["step"], records=recs, names=names,
                 anomalies=[(anomaly_row, seq, severity)], pid=seq,
             )
-            for c in doc.get("comm", []):
+            for j, c in enumerate(doc.get("comm", [])):
                 kind = "send" if int(c.get("ctype", 0)) == 0 else "recv"
-                writer.instant(
-                    seq, int(c["tid"]), f"comm {kind}", int(c["ts"]),
-                    args={
-                        "partner": int(c["partner"]), "nbytes": int(c["nbytes"]),
-                        "tag": int(c.get("tag", 0)),
-                    },
-                )
+                args = {
+                    "partner": int(c["partner"]), "nbytes": int(c["nbytes"]),
+                    "tag": int(c.get("tag", 0)),
+                }
+                writer.instant(seq, int(c["tid"]), f"comm {kind}",
+                               int(c["ts"]), args=args)
+                flow = flows.get((i, j))
+                if flow is None:
+                    continue
+                side, flow_id = flow
+                emit = writer.flow_start if side == "s" else writer.flow_finish
+                emit(seq, int(c["tid"]), "msg", int(c["ts"]), flow_id, args=args)
     finally:
         writer.close()
     return len(docs)

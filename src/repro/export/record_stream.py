@@ -39,14 +39,63 @@ _FIELDS = list(EXEC_RECORD_DTYPE.names)
 
 
 class RecordStreamWriter:
-    """Append-per-frame JSONL writer for the reduced record stream."""
+    """Append-per-frame JSONL writer for the reduced record stream.
 
-    def __init__(self, path: str):
+    ``append=True`` resumes a prior run's stream the way the provenance
+    store does: the existing file keeps its single header and all complete
+    frames, a torn final line (the prior run died mid-write) is truncated
+    away, and the fid → name dedup state (``new_funcs`` emission) is
+    recovered from the surviving prefix so resumed frames never re-announce
+    a name — the replay contract stays "one header, names before first
+    use" across any number of resume segments.
+    """
+
+    def __init__(self, path: str, append: bool = False):
         self.path = path
-        self._fh: Optional[IO[str]] = open(path, "w", encoding="utf-8", newline="\n")
-        self._fh.write(json.dumps({"type": "header", "version": 1},
-                                  sort_keys=True, separators=(",", ":")) + "\n")
         self._seen_fids: set = set()
+        resumed = append and self._recover(path)
+        if resumed:
+            self._fh: Optional[IO[str]] = open(
+                path, "a", encoding="utf-8", newline="\n"
+            )
+        else:
+            self._fh = open(path, "w", encoding="utf-8", newline="\n")
+            self._fh.write(json.dumps({"type": "header", "version": 1},
+                                      sort_keys=True, separators=(",", ":")) + "\n")
+
+    def _recover(self, path: str) -> bool:
+        """Scan an existing stream: rebuild ``_seen_fids``, truncate any
+        torn tail.  Returns False (start fresh) when there is nothing to
+        resume from."""
+        import os
+
+        try:
+            with open(path, "rb") as f:
+                raw = f.read()
+        except OSError:
+            return False
+        if not raw:
+            return False
+        good_end = 0
+        for line in raw.splitlines(keepends=True):
+            if not line.endswith(b"\n"):
+                break  # torn tail of a killed run
+            text = line.strip()
+            if text:
+                try:
+                    doc = json.loads(text)
+                except json.JSONDecodeError:
+                    break  # complete but corrupt line: cut here too
+                for fid in doc.get("new_funcs", {}):
+                    self._seen_fids.add(int(fid))
+            good_end += len(line)
+        if good_end == 0:
+            self._seen_fids.clear()
+            return False
+        if good_end < len(raw):
+            with open(path, "r+b") as f:
+                f.truncate(good_end)
+        return True
 
     def add_frame(
         self,

@@ -51,6 +51,7 @@ def train(
     provdb_transport: str = "local",
     shard_endpoints: Optional[str] = None,
     export_trace: bool = False,
+    viz_port: Optional[int] = None,
 ) -> Dict:
     cfg = configs.smoke(arch) if smoke else configs.get_config(arch)
     ctx = make_shard_ctx(cfg, None, global_batch, opts)
@@ -105,7 +106,12 @@ def train(
                 os.path.join(monitor_dir, "trace.json")
                 if export_trace and monitor_dir else None
             ),
+            viz_serve=viz_port,
         )
+        if monitor.viz_gateway is not None:
+            host, port = monitor.viz_gateway.endpoint
+            print(f"[viz] gateway serving http://{host}:{port}/ "
+                  f"(ws://{host}:{port}/ws)", flush=True)
         monitor.on_straggler(
             lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
         )
@@ -182,6 +188,12 @@ def main():
         help="continuously write <monitor-dir>/trace.json (Chrome Trace "
         "Event JSON, openable in ui.perfetto.dev) during the run",
     )
+    ap.add_argument(
+        "--viz-port", type=int, default=None,
+        help="serve the live viz gateway on this port (0 = ephemeral): HTTP "
+        "views + /trace for Perfetto open-with-URL + a WebSocket per-frame "
+        "anomaly broadcast at /ws",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.export_trace and not args.monitor_dir:
@@ -196,6 +208,7 @@ def main():
         ps_transport=args.ps_transport, provdb_transport=args.provdb_transport,
         shard_endpoints=args.shard_endpoints,
         export_trace=args.export_trace,
+        viz_port=args.viz_port,
     )
     if args.auto_restart:
         attempts = 0

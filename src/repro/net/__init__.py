@@ -20,7 +20,7 @@ from .framing import (
     encode_frame,
 )
 from .client import RPCClient
-from .server import MethodTable, RPCServer
+from .server import EventLoopConn, EventLoopServer, MethodTable, RPCServer
 from .shards import (
     PSShardService,
     ProvenanceShardService,
@@ -32,6 +32,8 @@ from .shards import (
 __all__ = [
     "CallTimeout",
     "ConnectionLost",
+    "EventLoopConn",
+    "EventLoopServer",
     "FrameDecoder",
     "FramingError",
     "MethodTable",

@@ -1,23 +1,29 @@
-"""Socket RPC server hosting a registered method table.
+"""Socket servers on one shared selectors event loop.
 
-:class:`RPCServer` is a selectors-based **event-loop server**: one IO
-thread owns the listening socket and every connection.  Sockets are
-non-blocking; each connection carries an incremental
-:class:`~repro.net.framing.FrameDecoder` on the inbound side and a queue of
-partially-written responses on the outbound side, so thousands of
-connections cost file descriptors, not threads.  Handlers registered
-``heavy=True`` (bulk queries, table dumps) are offloaded to a small daemon
-worker pool; everything else — the ``ps.push`` / ``prov.add_many`` hot path
-— runs inline on the loop with zero thread handoffs.  Outbound queues have
-a high/low-watermark: a connection whose peer stops reading is unsubscribed
-from READ until its queue drains (backpressure), so one slow consumer can
-neither wedge the loop nor balloon server memory.
+Two layers live here:
 
-(The PR 3/4 thread-per-connection ``ThreadedRPCServer`` fallback is gone;
-its measured throughput survives as the frozen denominator in
-``BENCH_net.json``.)
+:class:`EventLoopServer` is the protocol-agnostic machinery PR 4 built for
+the RPC transport, factored out so any byte protocol can run on it: one IO
+thread owns the listening socket and every connection; sockets are
+non-blocking; each connection carries a protocol decoder on the inbound
+side and a queue of partially-written responses on the outbound side, so
+thousands of connections cost file descriptors, not threads.  Outbound
+queues have a high/low-watermark: a connection whose peer stops reading is
+unsubscribed from READ until its queue drains (backpressure, counted in
+``backpressure_pauses`` / ``backpressure_resumes``), so one slow consumer
+can neither wedge the loop nor balloon server memory.  Subclasses implement
+``_make_conn`` / ``_on_data`` and get worker-thread offload via
+:meth:`EventLoopServer._offload` plus a thread-safe "run this on the loop"
+primitive via :meth:`EventLoopServer._post`.  ``repro.viz.gateway`` serves
+HTTP + WebSocket on exactly this base.
 
-The server preserves the ordering contract multiplexed clients rely on:
+:class:`RPCServer` is the shard RPC protocol on top: an incremental
+:class:`~repro.net.framing.FrameDecoder` per connection, light handlers
+inline on the loop, handlers registered ``heavy=True`` (bulk queries, table
+dumps) offloaded to the worker pool — the ``ps.push`` / ``prov.add_many``
+hot path never pays a thread handoff.
+
+The RPC server preserves the ordering contract multiplexed clients rely on:
 requests of one connection are *executed* strictly in arrival order (a
 heavy handler blocks later requests of its own connection only), so a
 pipelined read observes every write that preceded it on the same
@@ -131,57 +137,72 @@ def _dispatch_light(table: MethodTable, frame: Frame):
         )
 
 
-class _Conn:
-    """Per-connection state owned by the event loop thread."""
+class EventLoopConn:
+    """Per-connection IO state owned by the event loop thread.
+
+    Protocol servers subclass to add their decoder/queue state (slots keep
+    the per-connection footprint small at high fan-out).
+    ``close_when_flushed`` lets a protocol queue a final farewell (an HTTP
+    error body, a WebSocket close frame) and have the loop drop the
+    connection once it reaches the kernel.
+    """
 
     __slots__ = (
-        "sock", "fd", "decoder", "outq", "out_bytes", "pending", "busy",
-        "paused", "closed", "events",
+        "sock", "fd", "outq", "out_bytes", "paused", "closed", "events",
+        "close_when_flushed",
     )
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
         self.fd = sock.fileno()
-        self.decoder = FrameDecoder()
         self.outq: Deque[memoryview] = collections.deque()
         self.out_bytes = 0
-        self.pending: Deque[Frame] = collections.deque()
-        self.busy = False  # a heavy handler for this conn is on a worker
         self.paused = False  # READ unsubscribed: outbound queue over high water
         self.closed = False
+        self.close_when_flushed = False
         self.events = selectors.EVENT_READ
 
 
-class RPCServer:
-    """Selectors-based event-loop RPC server (the default).
+class EventLoopServer:
+    """Protocol-agnostic selectors event-loop server base.
 
-    One IO thread multiplexes the listener and every connection.  Light
-    handlers run inline on the loop; ``heavy=True`` handlers run on a small
-    pool of daemon worker threads, with strict per-connection request order
-    preserved (a connection's later requests wait for its in-flight heavy
-    handler; other connections don't).
+    One IO thread multiplexes the listener and every connection.  Protocol
+    subclasses implement:
+
+      * :meth:`_make_conn`   — build the per-connection state object
+      * :meth:`_on_data`     — consume received bytes (runs on the loop)
+
+    and may override:
+
+      * :meth:`_wants_read`     — extra inbound gating (e.g. a bounded
+        pipeline of decoded-but-unexecuted requests)
+      * :meth:`_on_conn_closed` — cleanup when a connection dies
+
+    Two primitives bridge threads:
+
+      * :meth:`_offload` runs a callable on a small daemon worker pool
+        (heavy handlers that would stall the loop)
+      * :meth:`_post` schedules a callable onto the loop thread from any
+        thread (worker completions, external broadcasts) — the only safe
+        way to touch connection state from outside the loop
 
     ``high_water``/``low_water`` bound the per-connection outbound queue: a
-    connection whose peer reads slower than it requests stops being *read*
-    once ``high_water`` bytes of responses are queued, and resumes below
+    connection whose peer reads slower than the server writes stops being
+    *read* once ``high_water`` bytes are queued, and resumes below
     ``low_water`` — the event-loop version of TCP backpressure, end to end.
     """
 
     def __init__(
         self,
-        table: MethodTable,
         host: str = "127.0.0.1",
         port: int = 0,
         workers: int = 2,
         high_water: int = 8 << 20,
         low_water: int = 1 << 20,
-        pending_max: int = 1024,
     ):
-        self.table = table
         self._workers = max(int(workers), 1)
         self._high_water = int(high_water)
         self._low_water = min(int(low_water), int(high_water))
-        self._pending_max = max(int(pending_max), 1)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -191,33 +212,48 @@ class RPCServer:
         self._port = self._sock.getsockname()[1]
         self._sel = selectors.DefaultSelector()
         self._sel.register(self._sock, selectors.EVENT_READ, "accept")
-        # Self-pipe: wakes the loop for stop() and worker completions.
+        # Self-pipe: wakes the loop for stop(), _post() and worker completions.
         self._wake_r, self._wake_w = socket.socketpair()
         self._wake_r.setblocking(False)
         self._wake_w.setblocking(False)
         self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
-        self._conns: Dict[int, _Conn] = {}
-        self._completions: Deque[Tuple[_Conn, Optional[bytes]]] = collections.deque()
+        self._conns: Dict[int, EventLoopConn] = {}
+        self._posted: Deque[Callable[[], None]] = collections.deque()
         self._jobs: "queue.SimpleQueue" = queue.SimpleQueue()
         self._worker_threads: List[threading.Thread] = []
         self._loop_thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
         self.backpressure_pauses = 0  # observability: slow-reader pauses taken
+        self.backpressure_resumes = 0  # ... and drains back under low water
+
+    # --------------------------------------------------------- protocol hooks
+    def _make_conn(self, sock: socket.socket) -> EventLoopConn:
+        raise NotImplementedError
+
+    def _on_data(self, conn: EventLoopConn, data: bytes) -> None:
+        raise NotImplementedError
+
+    def _wants_read(self, conn: EventLoopConn) -> bool:
+        return True
+
+    def _on_conn_closed(self, conn: EventLoopConn) -> None:
+        pass
 
     # ------------------------------------------------------------- lifecycle
     @property
     def endpoint(self) -> Tuple[str, int]:
         return (self._host, self._port)
 
-    def start(self) -> "RPCServer":
+    def start(self) -> "EventLoopServer":
         self._loop_thread = threading.Thread(
-            target=self._loop, name=f"rpc-loop:{self._port}", daemon=True
+            target=self._loop, name=f"{type(self).__name__}:{self._port}",
+            daemon=True,
         )
         self._loop_thread.start()
         return self
 
     def serve_forever(self) -> None:
-        """Blocking variant for worker processes / the CLI entrypoint."""
+        """Blocking variant for worker processes / CLI entrypoints."""
         if self._loop_thread is None:
             self.start()
         self._stopping.wait()
@@ -229,8 +265,8 @@ class RPCServer:
             self._loop_thread.join(timeout=5)
         # Normally the loop thread tore everything down on exit.  If it is
         # wedged (a light handler blocking the loop), force-close the
-        # sockets from here so clients observe ConnectionLost instead of
-        # hanging; the daemon loop thread dies with the process.
+        # sockets from here so clients observe a dropped connection instead
+        # of hanging; the daemon loop thread dies with the process.
         if self._loop_thread is not None and self._loop_thread.is_alive():
             for conn in list(self._conns.values()):
                 self._force_close(conn.sock)
@@ -255,6 +291,35 @@ class RPCServer:
         except (BlockingIOError, OSError):
             pass  # a wake is already pending, or we are shutting down
 
+    # --------------------------------------------------------- thread bridges
+    def _post(self, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to run on the loop thread (thread-safe)."""
+        self._posted.append(fn)
+        self._wake()
+
+    def _offload(self, fn: Callable[[], None]) -> None:
+        """Run ``fn`` on the daemon worker pool (spawned lazily)."""
+        if len(self._worker_threads) < self._workers:
+            t = threading.Thread(
+                target=self._worker_main,
+                name=f"{type(self).__name__}-worker:{self._port}:"
+                f"{len(self._worker_threads)}",
+                daemon=True,
+            )
+            t.start()
+            self._worker_threads.append(t)
+        self._jobs.put(fn)
+
+    def _worker_main(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            try:
+                job()
+            except Exception:  # pragma: no cover - worker survival net
+                pass
+
     # ------------------------------------------------------------- the loop
     def _loop(self) -> None:
         try:
@@ -270,7 +335,8 @@ class RPCServer:
                             pass
                     else:
                         self._service(key.data, _mask)
-                self._drain_completions()
+                while self._posted:
+                    self._posted.popleft()()
         finally:
             for conn in list(self._conns.values()):
                 self._close_conn(conn)
@@ -294,11 +360,11 @@ class RPCServer:
                 return
             sock.setblocking(False)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            conn = _Conn(sock)
+            conn = self._make_conn(sock)
             self._conns[conn.fd] = conn
             self._sel.register(sock, selectors.EVENT_READ, conn)
 
-    def _service(self, conn: _Conn, mask: int) -> None:
+    def _service(self, conn: EventLoopConn, mask: int) -> None:
         if conn.closed:
             return
         if mask & selectors.EVENT_WRITE:
@@ -315,79 +381,10 @@ class RPCServer:
         if not data:
             self._close_conn(conn)  # peer closed; a partial frame is its problem
             return
-        try:
-            conn.pending.extend(conn.decoder.feed(data))
-        except FramingError:
-            self._close_conn(conn)  # corrupt stream: drop the connection
-            return
-        self._drain_pending(conn)
-
-    def _drain_pending(self, conn: _Conn) -> None:
-        """Execute queued requests in arrival order until one offloads.
-
-        Replies are queued and flushed once at the end: requests that
-        arrived coalesced (a client's send buffer) answer in one syscall.
-        """
-        while conn.pending and not conn.busy and not conn.closed:
-            frame = conn.pending.popleft()
-            if frame.kind != REQUEST:
-                continue  # only clients originate the other kinds
-            resolved = _dispatch_light(self.table, frame)
-            if isinstance(resolved, bytes):
-                self._send(conn, resolved, flush=False)
-                continue
-            name, fn, heavy = resolved
-            if heavy:
-                conn.busy = True
-                self._submit(conn, name, fn, frame)
-            else:
-                reply = _run_method(name, fn, frame)
-                if reply is None:
-                    self._close_conn(conn)  # unframeable reply: drop conn
-                    return
-                self._send(conn, reply, flush=False)
-        if not conn.closed:
-            if conn.outq:
-                self._flush_out(conn)  # one syscall for the whole batch
-            else:
-                self._update_events(conn)  # may resume a pending-full pause
-
-    # -------------------------------------------------------- worker offload
-    def _submit(self, conn: _Conn, name: str, fn: Handler, frame: Frame) -> None:
-        if len(self._worker_threads) < self._workers:
-            t = threading.Thread(
-                target=self._worker_main,
-                name=f"rpc-worker:{self._port}:{len(self._worker_threads)}",
-                daemon=True,
-            )
-            t.start()
-            self._worker_threads.append(t)
-        self._jobs.put((conn, name, fn, frame))
-
-    def _worker_main(self) -> None:
-        while True:
-            job = self._jobs.get()
-            if job is None:
-                return
-            conn, name, fn, frame = job
-            reply = _run_method(name, fn, frame)
-            self._completions.append((conn, reply))
-            self._wake()
-
-    def _drain_completions(self) -> None:
-        while self._completions:
-            conn, reply = self._completions.popleft()
-            conn.busy = False
-            if conn.closed:
-                continue  # connection died while the handler ran
-            if reply is None:
-                self._close_conn(conn)
-                continue
-            self._send(conn, reply)
-            self._drain_pending(conn)
+        self._on_data(conn, data)
 
     # --------------------------------------------------------------- writes
-    def _send(self, conn: _Conn, data: bytes, flush: bool = True) -> None:
+    def _send(self, conn: EventLoopConn, data: bytes, flush: bool = True) -> None:
         if conn.closed:
             return
         conn.outq.append(memoryview(data))
@@ -399,7 +396,7 @@ class RPCServer:
         else:
             self._update_events(conn)
 
-    def _flush_out(self, conn: _Conn) -> None:
+    def _flush_out(self, conn: EventLoopConn) -> None:
         while conn.outq:
             if len(conn.outq) > 1 and len(conn.outq[0]) < (32 << 10):
                 # Coalesce queued small replies into one send() — the
@@ -427,9 +424,12 @@ class RPCServer:
             else:
                 conn.outq[0] = head[n:]
                 break  # kernel buffer full; wait for EVENT_WRITE
+        if not conn.outq and conn.close_when_flushed:
+            self._close_conn(conn)
+            return
         self._update_events(conn)
 
-    def _update_events(self, conn: _Conn) -> None:
+    def _update_events(self, conn: EventLoopConn) -> None:
         """Recompute the selector interest set: READ unless backpressured,
         WRITE while responses are queued."""
         if conn.closed:
@@ -439,11 +439,11 @@ class RPCServer:
             self.backpressure_pauses += 1
         elif conn.paused and conn.out_bytes <= self._low_water:
             conn.paused = False
+            self.backpressure_resumes += 1
         events = selectors.EVENT_WRITE if conn.outq else 0
-        # Inbound backpressure: requests buffered behind an in-flight heavy
-        # handler are also bounded — stop reading past pending_max frames
-        # (resumed by _drain_pending once the backlog shrinks).
-        if not conn.paused and len(conn.pending) < self._pending_max:
+        # Inbound backpressure: the protocol may additionally gate reads
+        # (e.g. requests buffered behind an in-flight heavy handler).
+        if not conn.paused and self._wants_read(conn):
             events |= selectors.EVENT_READ
         if events != conn.events:
             # events == 0 (fully backpressured, nothing to write) must leave
@@ -460,7 +460,7 @@ class RPCServer:
             except (KeyError, ValueError, OSError):
                 self._close_conn(conn)
 
-    def _close_conn(self, conn: _Conn) -> None:
+    def _close_conn(self, conn: EventLoopConn) -> None:
         if conn.closed:
             return
         conn.closed = True
@@ -471,5 +471,107 @@ class RPCServer:
             pass
         self._force_close(conn.sock)
         conn.outq.clear()
-        conn.pending.clear()
         conn.out_bytes = 0
+        self._on_conn_closed(conn)
+
+
+class _RPCConn(EventLoopConn):
+    """RPC per-connection state: frame decoder + bounded request pipeline."""
+
+    __slots__ = ("decoder", "pending", "busy")
+
+    def __init__(self, sock: socket.socket):
+        super().__init__(sock)
+        self.decoder = FrameDecoder()
+        self.pending: Deque[Frame] = collections.deque()
+        self.busy = False  # a heavy handler for this conn is on a worker
+
+
+class RPCServer(EventLoopServer):
+    """The shard RPC protocol on the event-loop base (the default server).
+
+    Light handlers run inline on the loop; ``heavy=True`` handlers run on
+    the worker pool, with strict per-connection request order preserved (a
+    connection's later requests wait for its in-flight heavy handler; other
+    connections don't).  ``pending_max`` bounds the decoded-but-unexecuted
+    request pipeline per connection: past it the server stops *reading*
+    that connection (frames stay in kernel buffers, not server memory).
+    """
+
+    def __init__(
+        self,
+        table: MethodTable,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        workers: int = 2,
+        high_water: int = 8 << 20,
+        low_water: int = 1 << 20,
+        pending_max: int = 1024,
+    ):
+        super().__init__(host=host, port=port, workers=workers,
+                         high_water=high_water, low_water=low_water)
+        self.table = table
+        self._pending_max = max(int(pending_max), 1)
+
+    # --------------------------------------------------------- protocol hooks
+    def _make_conn(self, sock: socket.socket) -> _RPCConn:
+        return _RPCConn(sock)
+
+    def _wants_read(self, conn: _RPCConn) -> bool:
+        return len(conn.pending) < self._pending_max
+
+    def _on_data(self, conn: _RPCConn, data: bytes) -> None:
+        try:
+            conn.pending.extend(conn.decoder.feed(data))
+        except FramingError:
+            self._close_conn(conn)  # corrupt stream: drop the connection
+            return
+        self._drain_pending(conn)
+
+    # ------------------------------------------------------------- execution
+    def _drain_pending(self, conn: _RPCConn) -> None:
+        """Execute queued requests in arrival order until one offloads.
+
+        Replies are queued and flushed once at the end: requests that
+        arrived coalesced (a client's send buffer) answer in one syscall.
+        """
+        while conn.pending and not conn.busy and not conn.closed:
+            frame = conn.pending.popleft()
+            if frame.kind != REQUEST:
+                continue  # only clients originate the other kinds
+            resolved = _dispatch_light(self.table, frame)
+            if isinstance(resolved, bytes):
+                self._send(conn, resolved, flush=False)
+                continue
+            name, fn, heavy = resolved
+            if heavy:
+                conn.busy = True
+                self._offload(
+                    lambda c=conn, n=name, f=fn, fr=frame: self._run_heavy(c, n, f, fr)
+                )
+            else:
+                reply = _run_method(name, fn, frame)
+                if reply is None:
+                    self._close_conn(conn)  # unframeable reply: drop conn
+                    return
+                self._send(conn, reply, flush=False)
+        if not conn.closed:
+            if conn.outq:
+                self._flush_out(conn)  # one syscall for the whole batch
+            else:
+                self._update_events(conn)  # may resume a pending-full pause
+
+    def _run_heavy(self, conn: _RPCConn, name: str, fn: Handler, frame: Frame) -> None:
+        """Worker-side: execute, then post the completion back to the loop."""
+        reply = _run_method(name, fn, frame)
+        self._post(lambda: self._complete_heavy(conn, reply))
+
+    def _complete_heavy(self, conn: _RPCConn, reply: Optional[bytes]) -> None:
+        conn.busy = False
+        if conn.closed:
+            return  # connection died while the handler ran
+        if reply is None:
+            self._close_conn(conn)
+            return
+        self._send(conn, reply)
+        self._drain_pending(conn)

@@ -55,6 +55,7 @@ class ChimbukoMonitor:
         shard_endpoints: Optional[list] = None,
         export_trace: Optional[str] = None,
         stream_path: Optional[str] = None,
+        viz_serve: Optional[int] = None,
     ):
         self.registry = registry or FunctionRegistry()
         # PS federation (paper §III-B2): with ps_shards > 1 the stats table
@@ -121,7 +122,19 @@ class ChimbukoMonitor:
         if stream_path:
             from repro.export.record_stream import RecordStreamWriter
 
-            self._stream_writer = RecordStreamWriter(stream_path)
+            # prov_append governs the whole resume: a resumed run appends to
+            # its record stream exactly like it appends to its provenance
+            # store (one header, prior frames preserved).
+            self._stream_writer = RecordStreamWriter(stream_path,
+                                                     append=prov_append)
+        # live viz gateway (paper §IV's online server): HTTP views + /trace
+        # + WebSocket per-frame broadcast, on the repro.net event loop.
+        self.frames_ingested = 0
+        self.viz_gateway = None
+        if viz_serve is not None:
+            from repro.viz.gateway import VizGateway  # lazy: circular import
+
+            self.viz_gateway = VizGateway(self, port=viz_serve).start()
         # straggler detection state
         self._stime = RunningStats()
         self._s_alpha = straggler_alpha
@@ -175,6 +188,12 @@ class ChimbukoMonitor:
                     anomalies=anom, n_records=len(res.records),
                     n_anomalies=res.n_anomalies, ts=ts,
                 )
+        self.frames_ingested += 1
+        if self.viz_gateway is not None:
+            self.viz_gateway.publish_frame(
+                frame.rank, frame.step, res.n_anomalies,
+                severity=max((sev for _k, _s, sev in anom), default=0),
+            )
         return res
 
     # ---------------------------------------------------------- stragglers
@@ -225,6 +244,9 @@ class ChimbukoMonitor:
             out["provdb_shards"] = self.provdb.num_shards
             out["provdb_shard_docs"] = self.provdb.shard_doc_counts()
             out["provdb_transport"] = self.provdb.transport
+        if self.viz_gateway is not None:
+            host, port = self.viz_gateway.endpoint
+            out["viz_endpoint"] = f"http://{host}:{port}"
         return out
 
     def flush_ps(self) -> None:
@@ -234,6 +256,9 @@ class ChimbukoMonitor:
 
     def close(self) -> None:
         self.flush_ps()
+        if self.viz_gateway is not None:
+            self.viz_gateway.stop()
+            self.viz_gateway = None
         self.provdb.close()
         if self._trace_writer is not None:
             self._trace_writer.close()

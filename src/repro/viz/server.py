@@ -158,25 +158,21 @@ class VizServer:
         }
 
     # ------------------------------------------------------------- export
-    def trace(self, path: Optional[str] = None) -> bytes:
-        """``/trace`` endpoint: the monitor's reduced record stream as a
-        Perfetto-openable Chrome trace (docs/export.md).
+    def write_trace(self, out) -> int:
+        """Stream the monitor's reduced record stream into ``out`` (a text
+        file-like) as a Chrome trace; returns the frame count.
 
-        Streams the monitor's in-memory state (kept records + anomaly →
-        provenance-doc links) through the same writer the live
-        ``export_trace=`` path and the offline ``python -m repro.export``
-        CLI drive, in the same ingestion order — so a browser fetching this
-        from a running job gets byte-for-byte the file the finished run
-        would export.  Returns the bytes; also writes them to ``path`` when
-        given.
+        Drives the same writer the live ``export_trace=`` path and the
+        offline ``python -m repro.export`` CLI drive, in the same ingestion
+        order — so whatever consumes ``out`` (a buffer, the gateway's
+        chunked-transfer stream) gets byte-for-byte the file the finished
+        run would export.
         """
-        import io as _io
-
         from repro.export.chrome_trace import ChromeTraceWriter
 
-        buf = _io.StringIO()
-        writer = ChromeTraceWriter(out=buf)
+        writer = ChromeTraceWriter(out=out)
         names = self.monitor.registry.names
+        n = 0
         for (rank, step), kept in self.monitor.kept.items():
             ts, n_records, n_anoms = self.monitor.frame_meta.get(
                 (rank, step), (None, len(kept), 0)
@@ -186,7 +182,18 @@ class VizServer:
                 anomalies=self.monitor.anom_meta.get((rank, step), ()),
                 n_records=n_records, n_anomalies=n_anoms, ts=ts,
             )
+            n += 1
         writer.close()
+        return n
+
+    def trace(self, path: Optional[str] = None) -> bytes:
+        """``/trace`` endpoint: the monitor's reduced record stream as a
+        Perfetto-openable Chrome trace (docs/export.md).  Returns the bytes;
+        also writes them to ``path`` when given."""
+        import io as _io
+
+        buf = _io.StringIO()
+        self.write_trace(buf)
         data = buf.getvalue().encode("utf-8")
         if path:
             with open(path, "wb") as f:

@@ -61,6 +61,10 @@ def golden_trace_bytes() -> bytes:
     # another rank/tid: independent track
     w.add_frame(1, 0, _recs([(2, 30, 60, 1)], rank=1, tid=9), names,
                 n_records=1, n_anomalies=0, ts=60)
+    # a cross-rank message: SEND on rank 0 → RECV on rank 1 as a flow pair
+    comm = {"partner": 1, "nbytes": 64, "tag": 5}
+    w.flow_start(0, 0, "msg", 35, 1, args=comm)
+    w.flow_finish(1, 9, "msg", 45, 1, args={**comm, "partner": 0})
     w.close()
     return buf.getvalue().encode("utf-8")
 
@@ -112,6 +116,11 @@ def test_golden_trace_contents():
     assert counts["async"] == 1  # the carried-open parent
     assert counts["instants"] == 1
     assert counts["counters"] == 3
+    assert counts["flows"] == 1  # the cross-rank SEND→RECV arrow
+    s = [e for e in doc["traceEvents"] if e["ph"] == "s"][0]
+    f_ = [e for e in doc["traceEvents"] if e["ph"] == "f"][0]
+    assert (s["cat"], s["id"]) == (f_["cat"], f_["id"]) == ("comm", 1)
+    assert s["ts"] <= f_["ts"] and f_["bp"] == "e"
     inst = [e for e in doc["traceEvents"] if e["ph"] == "i"][0]
     assert inst["args"]["prov_seq"] == 7
     assert inst["args"]["severity"] == 4
@@ -122,6 +131,28 @@ def test_golden_trace_contents():
               if e.get("pid") == 0 and e["ph"] in "BE"]
     assert [(e["ph"], e["name"]) for e in track0[:4]] == [
         ("B", "solve"), ("E", "solve"), ("B", "io"), ("B", "io")]
+
+
+def test_validator_rejects_malformed_flows():
+    def _flow(ph, fid, ts, **kw):
+        return {"ph": ph, "cat": "comm", "id": fid, "pid": 0, "tid": 0,
+                "name": "msg", "ts": ts, "args": {}, **kw}
+
+    with pytest.raises(ValueError, match="unpaired"):
+        validate_trace({"traceEvents": [_flow("s", 1, 10)]})
+    with pytest.raises(ValueError, match="unpaired"):
+        validate_trace({"traceEvents": [_flow("f", 1, 10)]})
+    with pytest.raises(ValueError, match="precedes"):
+        validate_trace({"traceEvents": [_flow("s", 1, 10), _flow("f", 1, 5)]})
+    with pytest.raises(ValueError, match="duplicate"):
+        validate_trace({"traceEvents": [
+            _flow("s", 1, 10), _flow("s", 1, 11), _flow("f", 1, 12)]})
+    with pytest.raises(ValueError, match="missing cat"):
+        validate_trace({"traceEvents": [
+            {"ph": "s", "pid": 0, "tid": 0, "name": "msg", "ts": 1}]})
+    # file order between the halves is free: f before s is fine
+    counts = validate_trace({"traceEvents": [_flow("f", 1, 12), _flow("s", 1, 10)]})
+    assert counts["flows"] == 1
 
 
 def test_validator_rejects_malformed():
@@ -344,6 +375,192 @@ def test_torn_stream_tail_exports_prefix(tmp_path):
     buf = io.StringIO()
     export_stream(path, out=buf)  # and the trace still validates
     validate_trace(json.loads(buf.getvalue()))
+
+
+# ------------------------------------------------------- comm flow pairing
+def _mk_doc(seq, rank, comm, ts0=0):
+    """Minimal provenance doc with the given comm events."""
+    from repro.core.events import EXEC_RECORD_DTYPE
+
+    anomaly = {f: 0 for f in EXEC_RECORD_DTYPE.names}
+    anomaly.update(rank=rank, tid=0, fid=2, entry=ts0, exit=ts0 + 50,
+                   runtime=50, depth=1, label=1)
+    return {"seq": seq, "rank": rank, "step": 0, "severity": 2,
+            "anomaly": anomaly, "call_stack": [], "neighbors": [],
+            "comm": comm}
+
+
+def _comm(ctype, partner, ts, nbytes=64, tag=5, tid=0):
+    return {"ctype": ctype, "partner": partner, "ts": ts, "nbytes": nbytes,
+            "tag": tag, "tid": tid}
+
+
+def _render(docs):
+    buf = io.StringIO()
+    render_provenance_trace(docs, out=buf)
+    return json.loads(buf.getvalue())
+
+
+def test_comm_flow_pairing_send_recv():
+    """A SEND on rank 0 and its RECV on rank 1 become one s/f flow pair at
+    the two comm instants' timestamps."""
+    docs = [
+        _mk_doc(0, 0, [_comm(0, 1, 100)]),      # SEND 0→1 at ts 100
+        _mk_doc(1, 1, [_comm(1, 0, 120)]),      # RECV on 1 from 0 at ts 120
+    ]
+    doc = _render(docs)
+    counts = validate_trace(doc)
+    assert counts["flows"] == 1
+    s = [e for e in doc["traceEvents"] if e["ph"] == "s"][0]
+    f_ = [e for e in doc["traceEvents"] if e["ph"] == "f"][0]
+    assert (s["ts"], s["pid"]) == (100, 0)
+    assert (f_["ts"], f_["pid"]) == (120, 1)
+    assert s["id"] == f_["id"] and s["cat"] == f_["cat"] == "comm"
+
+
+def test_comm_flow_no_false_pairs():
+    """No arrow when ts ordering, nbytes, or tag rule the match out — and
+    the unmatched instants still render."""
+    cases = [
+        [_mk_doc(0, 0, [_comm(0, 1, 200)]), _mk_doc(1, 1, [_comm(1, 0, 120)])],
+        [_mk_doc(0, 0, [_comm(0, 1, 100, nbytes=8)]),
+         _mk_doc(1, 1, [_comm(1, 0, 120, nbytes=64)])],
+        [_mk_doc(0, 0, [_comm(0, 1, 100, tag=1)]),
+         _mk_doc(1, 1, [_comm(1, 0, 120, tag=2)])],
+    ]
+    for docs in cases:
+        doc = _render(docs)
+        assert validate_trace(doc)["flows"] == 0
+        assert sum(e["name"].startswith("comm") for e in doc["traceEvents"]
+                   if e["ph"] == "i") == 2
+
+
+def test_comm_flow_fifo_and_dedup():
+    """Two in-flight messages on one channel pair FIFO; an event captured by
+    two overlapping windows flows only once."""
+    docs = [
+        _mk_doc(0, 0, [_comm(0, 1, 100), _comm(0, 1, 110)]),
+        _mk_doc(1, 1, [_comm(1, 0, 105), _comm(1, 0, 130)]),
+        _mk_doc(2, 0, [_comm(0, 1, 100)]),  # duplicate SEND, another window
+    ]
+    doc = _render(docs)
+    counts = validate_trace(doc)
+    assert counts["flows"] == 2
+    ss = sorted((e["id"], e["ts"]) for e in doc["traceEvents"] if e["ph"] == "s")
+    ff = sorted((e["id"], e["ts"]) for e in doc["traceEvents"] if e["ph"] == "f")
+    # FIFO: first send → first recv, second send → second recv
+    assert [ts for _i, ts in ss] == [100, 110]
+    assert [ts for _i, ts in ff] == [105, 130]
+    assert _render(docs) == doc  # deterministic
+
+
+# --------------------------------------------------- stream append resume
+def test_stream_writer_append_resume(tmp_path):
+    """append=True resumes: one header, prior frames preserved byte-for-byte,
+    fid dedup state recovered so names aren't re-announced."""
+    from repro.export.record_stream import RecordStreamWriter
+
+    path = str(tmp_path / "stream.jsonl")
+    names = {1: "main", 2: "solve"}
+    w = RecordStreamWriter(path)
+    w.add_frame(0, 0, _recs([(1, 0, 10, 1), (2, 2, 8, 2)]), names,
+                n_records=2, ts=10)
+    w.close()
+    with open(path, "rb") as f:
+        seg1 = f.read()
+    w = RecordStreamWriter(path, append=True)
+    w.add_frame(0, 1, _recs([(2, 12, 18, 2)]), names, n_records=1, ts=18)
+    w.close()
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data.startswith(seg1)  # prior frames untouched
+    lines = [json.loads(line) for line in data.splitlines()]
+    assert sum(d["type"] == "header" for d in lines) == 1
+    frames = [d for d in lines if d["type"] == "frame"]
+    assert [(d["rank"], d["step"]) for d in frames] == [(0, 0), (0, 1)]
+    assert frames[0]["new_funcs"] == {"1": "main", "2": "solve"}
+    assert frames[1]["new_funcs"] == {}  # dedup state recovered, not reset
+    assert len(list(iter_stream_frames(path))) == 2
+
+
+def test_stream_append_truncates_torn_tail(tmp_path):
+    """Resuming over a torn tail (killed mid-write) drops only the torn
+    line; appended frames continue the stream cleanly."""
+    from repro.export.record_stream import RecordStreamWriter
+
+    path = str(tmp_path / "stream.jsonl")
+    w = RecordStreamWriter(path)
+    w.add_frame(0, 0, _recs([(1, 0, 10, 1)]), {1: "main"}, n_records=1, ts=10)
+    w.add_frame(0, 1, _recs([(1, 12, 20, 1)]), {1: "main"}, n_records=1, ts=20)
+    w.close()
+    with open(path, "rb") as f:
+        data = f.read()
+    lines = data.splitlines(keepends=True)
+    with open(path, "wb") as f:
+        f.writelines(lines[:-1])
+        f.write(lines[-1][: len(lines[-1]) // 2])  # tear the last frame
+    w = RecordStreamWriter(path, append=True)
+    w.add_frame(0, 2, _recs([(1, 22, 30, 1)]), {1: "main"}, n_records=1, ts=30)
+    w.close()
+    frames = list(iter_stream_frames(path))
+    assert [(f["rank"], f["step"]) for f in frames] == [(0, 0), (0, 2)]
+    # and the whole file is clean JSONL again (no torn fragment mid-file)
+    with open(path, "rb") as f:
+        for line in f.read().splitlines():
+            json.loads(line)
+
+
+def test_stream_append_empty_or_missing_starts_fresh(tmp_path):
+    """append=True over a missing or empty file degrades to a fresh stream
+    (header written once)."""
+    from repro.export.record_stream import RecordStreamWriter
+
+    for name, pre in (("missing.jsonl", None), ("empty.jsonl", b"")):
+        path = str(tmp_path / name)
+        if pre is not None:
+            with open(path, "wb") as f:
+                f.write(pre)
+        w = RecordStreamWriter(path, append=True)
+        w.add_frame(0, 0, _recs([(1, 0, 10, 1)]), {1: "main"},
+                    n_records=1, ts=10)
+        w.close()
+        lines = open(path).read().splitlines()
+        assert json.loads(lines[0])["type"] == "header"
+        assert len(list(iter_stream_frames(path))) == 1
+
+
+def test_monitor_stream_resume_matches_prov_append(tmp_path):
+    """ROADMAP regression: a prov_append resume must append the record
+    stream too — both segments replay, and the trace still validates."""
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+
+    td = str(tmp_path)
+    spec = nwchem_like(anomaly_rate=0.02)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 40.0
+
+    def _segment(step_lo, step_hi, append):
+        gen = WorkloadGenerator(spec, n_ranks=2, seed=3)
+        monitor = ChimbukoMonitor(
+            num_funcs=len(gen.registry), registry=gen.registry, min_samples=20,
+            prov_path=os.path.join(td, "provenance.jsonl"),
+            stream_path=os.path.join(td, "stream.jsonl"),
+            prov_append=append, run_info={"timestamp": 0.0},
+        )
+        for step in range(step_lo, step_hi):
+            for rank in range(2):
+                frame, _ = gen.frame(rank, step)
+                monitor.ingest(frame)
+        monitor.close()
+
+    _segment(0, 5, append=False)
+    n_seg1 = len(list(iter_stream_frames(os.path.join(td, "stream.jsonl"))))
+    _segment(5, 10, append=True)  # the restart path
+    frames = list(iter_stream_frames(os.path.join(td, "stream.jsonl")))
+    assert n_seg1 == 10 and len(frames) == 20  # both segments present
+    steps = sorted({f["step"] for f in frames})
+    assert steps == list(range(10))
+    validate_trace(json.loads(_offline_bytes(td)))
 
 
 def test_path_family_handles_shard_in_dirname(tmp_path):

@@ -1,0 +1,882 @@
+"""repro.viz.gateway: protocol fuzz + load suite.
+
+Three layers, mirroring the FrameDecoder discipline in tests/test_net.py:
+
+  * the HTTP request parser and the RFC 6455 frame codec driven
+    byte-by-byte, coalesced, randomly split, truncated, and with
+    adversarial inputs — every violation must be the *typed* error with
+    the right status / close code;
+  * a live gateway over real monitor output: every view endpoint, ETag
+    304 caching, `/trace` byte-identical to the offline export, and
+    malformed input closing one connection while the loop keeps serving;
+  * load: N concurrent WebSocket viewers with identical broadcast
+    sequences, a slow reader exercising the backpressure pause/resume
+    counters without stalling fast viewers, mid-broadcast kills, and
+    queue-overflow shedding (close 1013).
+"""
+import base64
+import json
+import os
+import random
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.viz import http as H
+from repro.viz import ws as W
+from repro.viz.gateway import ReplayMonitor, VizGateway
+from repro.viz.server import VizServer
+
+from test_export import _offline_bytes, _run_monitor
+
+# ======================================================================
+# helpers
+# ======================================================================
+
+def _feed_split(parser, data, sizes):
+    """Feed `data` to a parser in chunks of the given sizes (cycled)."""
+    out, i, k = [], 0, 0
+    while i < len(data):
+        n = sizes[k % len(sizes)]
+        out.extend(parser.feed(data[i:i + n]))
+        i += n
+        k += 1
+    return out
+
+
+def _read_head(s):
+    buf = b""
+    while b"\r\n\r\n" not in buf:
+        chunk = s.recv(65536)
+        if not chunk:
+            raise ConnectionError("peer closed before response head")
+        buf += chunk
+    head, _, rest = buf.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split(" ")[1])
+    hdrs = {}
+    for ln in lines[1:]:
+        k, _, v = ln.partition(":")
+        hdrs[k.strip().lower()] = v.strip()
+    return status, hdrs, rest
+
+
+def _dechunk(s, buf):
+    out = b""
+    while True:
+        while b"\r\n" not in buf:
+            buf += s.recv(65536)
+        line, _, buf = buf.partition(b"\r\n")
+        n = int(line, 16)
+        while len(buf) < n + 2:
+            buf += s.recv(65536)
+        out += buf[:n]
+        buf = buf[n + 2:]
+        if n == 0:
+            return out, buf
+
+
+def _read_response(s):
+    status, hdrs, rest = _read_head(s)
+    if hdrs.get("transfer-encoding") == "chunked":
+        body, rest = _dechunk(s, rest)
+    elif "content-length" in hdrs:
+        n = int(hdrs["content-length"])
+        while len(rest) < n:
+            more = s.recv(65536)
+            if not more:
+                raise ConnectionError("peer closed mid-body")
+            rest += more
+        body, rest = rest[:n], rest[n:]
+    else:
+        body = b""
+    return status, hdrs, body, rest
+
+
+def _get(endpoint, target, headers=(), sock=None, keep_alive=False):
+    host, port = endpoint
+    s = sock or socket.create_connection((host, port), timeout=10)
+    extra = "".join(f"{k}: {v}\r\n" for k, v in headers)
+    conn = "" if keep_alive else "Connection: close\r\n"
+    s.sendall(f"GET {target} HTTP/1.1\r\nHost: t\r\n{extra}{conn}\r\n".encode())
+    status, hdrs, body, _rest = _read_response(s)
+    if sock is None:
+        s.close()
+    return status, hdrs, body
+
+
+def _ws_connect(endpoint, path="/ws"):
+    """Handshake + consume the hello; returns (sock, decoder, hello)."""
+    host, port = endpoint
+    s = socket.create_connection((host, port), timeout=10)
+    key = base64.b64encode(os.urandom(16)).decode()
+    s.sendall((f"GET {path} HTTP/1.1\r\nHost: t\r\nUpgrade: websocket\r\n"
+               f"Connection: Upgrade\r\nSec-WebSocket-Key: {key}\r\n"
+               f"Sec-WebSocket-Version: 13\r\n\r\n").encode())
+    status, hdrs, rest = _read_head(s)
+    assert status == 101
+    assert hdrs["sec-websocket-accept"] == W.accept_key(key)
+    dec = W.WSDecoder(require_mask=False)
+    msgs = dec.feed(rest)
+    while not msgs:
+        msgs = dec.feed(s.recv(65536))
+    hello = json.loads(msgs.pop(0).data)
+    assert hello["type"] == "hello"
+    return s, dec, hello
+
+
+def _recv_msgs(s, dec, n, timeout=10.0):
+    """Collect n complete WS messages (excluding nothing) or time out."""
+    msgs = []
+    deadline = time.monotonic() + timeout
+    s.settimeout(0.5)
+    while len(msgs) < n:
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"got {len(msgs)}/{n} messages")
+        try:
+            data = s.recv(1 << 20)
+        except socket.timeout:
+            continue
+        if not data:
+            break
+        msgs.extend(dec.feed(data))
+    return msgs
+
+
+def _wait(pred, timeout=10.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"timed out waiting for {what}")
+        time.sleep(0.01)
+
+
+# ======================================================================
+# HTTP parser fuzz (unit)
+# ======================================================================
+
+_REQ = (b"GET /series?rank=3&x=entry HTTP/1.1\r\nHost: h\r\n"
+        b"Accept: */*\r\n\r\n")
+
+
+def test_http_parser_byte_by_byte():
+    out = _feed_split(H.HttpRequestParser(), _REQ, [1])
+    assert len(out) == 1
+    req = out[0]
+    assert (req.method, req.path, req.version) == ("GET", "/series", "HTTP/1.1")
+    assert req.param("rank") == "3" and req.param("x") == "entry"
+    assert req.header("host") == "h" and req.keep_alive
+
+
+def test_http_parser_pipelined_coalesced():
+    """Three pipelined requests in one chunk — and in dribbled chunks —
+    parse identically."""
+    data = (b"GET /a HTTP/1.1\r\n\r\n"
+            b"POST /b HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello"
+            b"GET /c HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+    whole = H.HttpRequestParser().feed(data)
+    assert [r.path for r in whole] == ["/a", "/b", "/c"]
+    assert whole[1].body == b"hello"
+    assert whole[0].keep_alive and whole[2].keep_alive
+    for sizes in ([1], [3, 7], [2, 11, 5]):
+        split = _feed_split(H.HttpRequestParser(), data, sizes)
+        assert [(r.method, r.path, r.body) for r in split] == [
+            (r.method, r.path, r.body) for r in whole]
+
+
+def test_http_parser_random_splits_fuzz():
+    rng = random.Random(1234)
+    data = _REQ * 5
+    for _ in range(50):
+        parser = H.HttpRequestParser()
+        out, i = [], 0
+        while i < len(data):
+            n = rng.randint(1, 64)
+            out.extend(parser.feed(data[i:i + n]))
+            i += n
+        assert len(out) == 5
+        assert all(r.path == "/series" for r in out)
+
+
+@pytest.mark.parametrize("raw,status", [
+    (b"GARBAGE\r\n\r\n", 400),                            # not a request line
+    (b"GET /x\r\n\r\n", 400),                             # 2-part request line
+    (b"GET /x HTTP/9.9\r\n\r\n", 400),                    # unknown version
+    (b"G ET /x HTTP/1.1\r\n\r\n", 400),                   # bad method token
+    (b"GET x://y HTTP/1.1\r\n\r\n", 400),                 # non-origin target
+    (b"GET /x HTTP/1.1\r\nBad Header\r\n\r\n", 400),      # no colon
+    (b"GET /x HTTP/1.1\r\nA: 1\r\n  folded\r\n\r\n", 400),  # obs-fold
+    (b"GET /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),
+    (b"GET /x HTTP/1.1\r\nContent-Length: -5\r\n\r\n", 400),
+    (b"GET /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+])
+def test_http_parser_rejects(raw, status):
+    with pytest.raises(H.HttpError) as ei:
+        H.HttpRequestParser().feed(raw)
+    assert ei.value.status == status
+
+
+def test_http_parser_bounded():
+    """Oversized heads and bodies fail with 431/413 *before* unbounded
+    buffering — including a head that never terminates."""
+    p = H.HttpRequestParser(max_head=256)
+    with pytest.raises(H.HttpError) as ei:
+        p.feed(b"GET /x HTTP/1.1\r\nA: " + b"x" * 300 + b"\r\n\r\n")
+    assert ei.value.status == 431
+    p = H.HttpRequestParser(max_head=256)
+    with pytest.raises(H.HttpError) as ei:  # endless head, no terminator
+        for _ in range(10):
+            p.feed(b"x" * 64)
+    assert ei.value.status == 431
+    p = H.HttpRequestParser(max_headers=3)
+    with pytest.raises(H.HttpError) as ei:
+        p.feed(b"GET /x HTTP/1.1\r\nA: 1\r\nB: 2\r\nC: 3\r\nD: 4\r\n\r\n")
+    assert ei.value.status == 431
+    p = H.HttpRequestParser(max_body=100)
+    with pytest.raises(H.HttpError) as ei:
+        p.feed(b"POST /x HTTP/1.1\r\nContent-Length: 500\r\n\r\n")
+    assert ei.value.status == 413
+
+
+def test_http_parser_truncated_is_silent():
+    """A truncated request is pending, not an error — bytes may follow."""
+    p = H.HttpRequestParser()
+    assert p.feed(b"GET /x HT") == []
+    assert p.feed(b"TP/1.1\r\nHost: h") == []
+    out = p.feed(b"\r\n\r\n")
+    assert len(out) == 1 and out[0].path == "/x"
+
+
+def test_http_parser_upgrade_pauses():
+    """After an upgrade request the parser pauses: later bytes belong to
+    the WebSocket decoder and come back via take_buffer()."""
+    p = H.HttpRequestParser()
+    ws_bytes = W.encode_frame(W.OP_PING, b"x", mask=b"abcd")
+    out = p.feed(b"GET /ws HTTP/1.1\r\nUpgrade: websocket\r\n"
+                 b"Connection: Upgrade\r\n\r\n" + ws_bytes)
+    assert len(out) == 1 and out[0].wants_upgrade()
+    assert p.paused
+    assert p.feed(b"more") == []  # still paused, bytes buffered
+    assert p.take_buffer() == ws_bytes + b"more"
+
+
+def test_http_keep_alive_semantics():
+    p = H.HttpRequestParser()
+    reqs = p.feed(b"GET /a HTTP/1.1\r\nConnection: close\r\n\r\n")
+    assert not reqs[0].keep_alive
+    reqs = H.HttpRequestParser().feed(b"GET /a HTTP/1.0\r\n\r\n")
+    assert not reqs[0].keep_alive
+
+
+# ======================================================================
+# WebSocket codec fuzz (unit)
+# ======================================================================
+
+def test_ws_accept_key_rfc_example():
+    # RFC 6455 §1.3's worked example
+    assert (W.accept_key("dGhlIHNhbXBsZSBub25jZQ==")
+            == "s3pPLMBiTxaQ9kYGzzhZRbK+xOo=")
+
+
+@pytest.mark.parametrize("size", [0, 1, 125, 126, 4096, 65535, 65536])
+def test_ws_codec_roundtrip_sizes(size):
+    """Every length-encoding regime (7-bit / 16-bit / 64-bit) roundtrips,
+    masked, whole and dribbled byte-by-byte."""
+    payload = bytes(i & 0xFF for i in range(size))
+    wire = W.encode_frame(W.OP_BINARY, payload, mask=b"\x01\x02\x03\x04")
+    dec = W.WSDecoder(max_message=1 << 20)
+    msgs = dec.feed(wire)
+    assert len(msgs) == 1 and msgs[0].data == payload
+    dec = W.WSDecoder(max_message=1 << 20)
+    step = 1 if size <= 126 else 1021  # byte-wise for small, coarse for big
+    msgs = []
+    for i in range(0, len(wire), step):
+        msgs.extend(dec.feed(wire[i:i + step]))
+    assert len(msgs) == 1 and msgs[0].data == payload
+
+
+def test_ws_codec_coalesced_and_random_splits():
+    frames = b"".join(
+        W.encode_frame(W.OP_TEXT, f"m{i}".encode(), mask=os.urandom(4))
+        for i in range(20)
+    )
+    whole = W.WSDecoder().feed(frames)
+    assert [m.data for m in whole] == [f"m{i}".encode() for i in range(20)]
+    rng = random.Random(99)
+    for _ in range(30):
+        dec = W.WSDecoder()
+        out, i = [], 0
+        while i < len(frames):
+            n = rng.randint(1, 16)
+            out.extend(dec.feed(frames[i:i + n]))
+            i += n
+        assert [m.data for m in out] == [m.data for m in whole]
+
+
+def test_ws_fragmentation_with_interleaved_control():
+    """A fragmented text message with a ping in the middle (legal per
+    §5.4) reassembles; the control frame pops out mid-stream."""
+    m = b"abcd"
+    wire = (W.encode_frame(W.OP_TEXT, b"hel", fin=False, mask=m)
+            + W.encode_frame(W.OP_PING, b"p", mask=m)
+            + W.encode_frame(W.OP_CONT, b"lo ", fin=False, mask=m)
+            + W.encode_frame(W.OP_CONT, b"world", fin=True, mask=m))
+    msgs = W.WSDecoder().feed(wire)
+    assert [(x.opcode, x.data) for x in msgs] == [
+        (W.OP_PING, b"p"), (W.OP_TEXT, b"hello world")]
+
+
+@pytest.mark.parametrize("wire,code", [
+    # nonzero RSV bits
+    (W.encode_frame(W.OP_TEXT, b"x", mask=b"abcd", rsv=4), 1002),
+    # unknown opcode 0x3
+    (W.encode_frame(0x3, b"x", mask=b"abcd"), 1002),
+    # unmasked client frame
+    (W.encode_frame(W.OP_TEXT, b"x"), 1002),
+    # fragmented control frame
+    (W.encode_frame(W.OP_PING, b"x", fin=False, mask=b"abcd"), 1002),
+    # >125-byte control frame
+    (W.encode_frame(W.OP_PING, b"x" * 126, mask=b"abcd"), 1002),
+    # CONT with no message in flight
+    (W.encode_frame(W.OP_CONT, b"x", mask=b"abcd"), 1002),
+    # new data frame during fragmentation
+    (W.encode_frame(W.OP_TEXT, b"a", fin=False, mask=b"abcd")
+     + W.encode_frame(W.OP_TEXT, b"b", mask=b"abcd"), 1002),
+    # close payload of exactly 1 byte
+    (W.encode_frame(W.OP_CLOSE, b"\x03", mask=b"abcd"), 1002),
+    # reserved close code 1005
+    (W.encode_frame(W.OP_CLOSE, struct.pack("!H", 1005), mask=b"abcd"), 1002),
+    # invalid UTF-8 text
+    (W.encode_frame(W.OP_TEXT, b"\xff\xfe", mask=b"abcd"), 1007),
+    # invalid UTF-8 close reason
+    (W.encode_frame(W.OP_CLOSE, struct.pack("!H", 1000) + b"\xff",
+                    mask=b"abcd"), 1007),
+])
+def test_ws_protocol_rejects(wire, code):
+    with pytest.raises(W.WSProtocolError) as ei:
+        W.WSDecoder().feed(wire)
+    assert ei.value.code == code
+
+
+def test_ws_bad_mask_corrupts_not_crashes():
+    """A wrong mask yields wrong bytes, not a decoder crash — binary data
+    has no integrity check at this layer (1007 only fires for text)."""
+    good = W.encode_frame(W.OP_BINARY, b"payload", mask=b"abcd")
+    tampered = good[:2] + b"zzzz" + good[6:]  # swap the mask key
+    msgs = W.WSDecoder().feed(tampered)
+    assert len(msgs) == 1 and msgs[0].data != b"payload"
+
+
+def test_ws_oversized_rejected_before_buffering():
+    """1009 fires off the *declared* length — the payload never arrives."""
+    dec = W.WSDecoder(max_message=1024)
+    header = struct.pack("!BBQ", 0x82, 0x80 | 127, 1 << 30) + b"abcd"
+    with pytest.raises(W.WSProtocolError) as ei:
+        dec.feed(header)  # no payload bytes at all
+    assert ei.value.code == 1009
+    # fragments must count cumulatively too
+    dec = W.WSDecoder(max_message=1024)
+    m = b"abcd"
+    dec.feed(W.encode_frame(W.OP_BINARY, b"x" * 800, fin=False, mask=m))
+    with pytest.raises(W.WSProtocolError) as ei:
+        dec.feed(W.encode_frame(W.OP_CONT, b"x" * 800, fin=True, mask=m))
+    assert ei.value.code == 1009
+
+
+def test_ws_truncated_frame_is_silent():
+    dec = W.WSDecoder()
+    wire = W.encode_frame(W.OP_TEXT, b"hello", mask=b"abcd")
+    assert dec.feed(wire[:3]) == []
+    assert dec.feed(wire[3:-1]) == []
+    msgs = dec.feed(wire[-1:])
+    assert len(msgs) == 1 and msgs[0].data == b"hello"
+
+
+# ======================================================================
+# live gateway: HTTP endpoints
+# ======================================================================
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One monitor + running gateway shared by the read-only HTTP tests."""
+    td = str(tmp_path_factory.mktemp("gwrun"))
+    monitor = _run_monitor(td, n_ranks=3, steps=8)
+    gw = VizGateway(monitor).start()
+    yield td, monitor, gw
+    gw.stop()
+    monitor.close()
+
+
+def test_endpoints_match_vizserver(served):
+    """Every HTTP view returns exactly the VizServer data products."""
+    td, monitor, gw = served
+    viz = VizServer(monitor)
+    pairs = [
+        ("/dashboard?stat=total&top=2&bottom=2",
+         viz.rank_dashboard(stat="total", top=2, bottom=2)),
+        ("/series?rank=1", viz.frame_series(1)),
+        ("/function?rank=0&step=3&x=entry&y=runtime",
+         viz.function_view(0, 3, x="entry", y="runtime")),
+        ("/callstack?rank=0&t0=0&t1=999999999",
+         viz.call_stack_view(0, 0, 999999999)),
+        ("/provenance?min_severity=1&limit=5",
+         viz.provenance_view(min_severity=1, limit=5)),
+    ]
+    for target, expect in pairs:
+        status, hdrs, body = _get(gw.endpoint, target)
+        assert status == 200, target
+        assert hdrs["access-control-allow-origin"] == "*"
+        # through JSON both ways: HTTP serialization stringifies dict keys
+        assert json.loads(body) == json.loads(json.dumps(expect)), target
+
+
+def test_trace_byte_identical_to_offline_export(served):
+    """Acceptance: /trace over HTTP from a live gateway == the offline
+    `python -m repro.export` bytes, delivered chunked."""
+    td, monitor, gw = served
+    status, hdrs, body = _get(gw.endpoint, "/trace")
+    assert status == 200
+    assert hdrs.get("transfer-encoding") == "chunked"
+    assert body == _offline_bytes(td)
+    from repro.export.chrome_trace import validate_trace
+    validate_trace(json.loads(body))
+
+
+def test_http_statuses(served):
+    td, monitor, gw = served
+    for target, want in [
+        ("/nope", 404),
+        ("/series", 400),             # missing required rank
+        ("/series?rank=abc", 400),    # non-integer rank
+        ("/dashboard?stat=bogus", 400),
+        ("/function?rank=0&step=0&x=bogus", 400),
+    ]:
+        status, _h, _b = _get(gw.endpoint, target)
+        assert status == want, target
+    s = socket.create_connection(gw.endpoint, timeout=10)
+    s.sendall(b"DELETE /series HTTP/1.1\r\nHost: t\r\n\r\n")
+    status, _h, _b, _r = _read_response(s)
+    assert status == 405
+    s.close()
+
+
+def test_etag_304_on_every_endpoint(served):
+    td, monitor, gw = served
+    for target in ("/dashboard", "/series?rank=0", "/trace"):
+        status, hdrs, body = _get(gw.endpoint, target)
+        assert status == 200 and body
+        etag = hdrs["etag"]
+        status2, hdrs2, body2 = _get(gw.endpoint, target,
+                                     headers=[("If-None-Match", etag)])
+        assert status2 == 304 and body2 == b""
+        assert hdrs2["etag"] == etag
+
+
+def test_keep_alive_pipelining(served):
+    """Two requests on one connection, sent coalesced, both answered in
+    order; Connection: close then ends the stream."""
+    td, monitor, gw = served
+    s = socket.create_connection(gw.endpoint, timeout=10)
+    s.sendall(b"GET /series?rank=0 HTTP/1.1\r\nHost: t\r\n\r\n"
+              b"GET /series?rank=1 HTTP/1.1\r\nHost: t\r\n"
+              b"Connection: close\r\n\r\n")
+    st1, h1, b1, rest = _read_response(s)
+    assert st1 == 200 and h1["connection"] == "keep-alive"
+    # second response may ride the same buffer
+    while b"\r\n\r\n" not in rest:
+        rest += s.recv(65536)
+    head, _, tail = rest.partition(b"\r\n\r\n")
+    lines = head.decode().split("\r\n")
+    assert int(lines[0].split(" ")[1]) == 200
+    hdrs = dict(ln.lower().split(": ", 1) for ln in lines[1:] if ": " in ln)
+    assert hdrs["connection"] == "close"
+    n = int(hdrs["content-length"])
+    while len(tail) < n:
+        tail += s.recv(65536)
+    assert json.loads(tail[:n])
+    assert s.recv(65536) == b""  # server honored Connection: close
+    s.close()
+
+
+def test_malformed_http_closes_conn_not_loop(served):
+    """Garbage on one connection answers 400 and closes it; the very next
+    connection is served normally (the loop survived)."""
+    td, monitor, gw = served
+    s = socket.create_connection(gw.endpoint, timeout=10)
+    s.sendall(b"NOT EVEN HTTP\r\n\r\n")
+    status, hdrs, body, _ = _read_response(s)
+    assert status == 400 and hdrs["connection"] == "close"
+    assert s.recv(65536) == b""  # and then the close
+    s.close()
+    status, _h, _b = _get(gw.endpoint, "/dashboard")
+    assert status == 200
+
+
+def test_truncated_request_abandoned(served):
+    """A half-request then client close must not wedge the server."""
+    td, monitor, gw = served
+    s = socket.create_connection(gw.endpoint, timeout=10)
+    s.sendall(b"GET /series?ra")  # never finishes
+    s.close()
+    status, _h, _b = _get(gw.endpoint, "/series?rank=0")
+    assert status == 200
+
+
+def test_etag_fresh_after_new_frame(tmp_path):
+    """304 while nothing changed; a newly ingested frame invalidates."""
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.trace.monitor import ChimbukoMonitor
+
+    spec = nwchem_like(anomaly_rate=0.02)
+    gen = WorkloadGenerator(spec, n_ranks=1, seed=0)
+    monitor = ChimbukoMonitor(num_funcs=len(gen.registry),
+                              registry=gen.registry, min_samples=20)
+    frame, _ = gen.frame(0, 0)
+    monitor.ingest(frame)
+    gw = VizGateway(monitor).start()
+    try:
+        st, hdrs, body = _get(gw.endpoint, "/series?rank=0")
+        etag = hdrs["etag"]
+        st2, _h, _b = _get(gw.endpoint, "/series?rank=0",
+                           headers=[("If-None-Match", etag)])
+        assert st2 == 304
+        frame, _ = gen.frame(0, 1)
+        monitor.ingest(frame)  # frame counter moves -> etag invalidated
+        st3, h3, b3 = _get(gw.endpoint, "/series?rank=0",
+                           headers=[("If-None-Match", etag)])
+        assert st3 == 200 and h3["etag"] != etag
+        assert len(json.loads(b3)) == 2  # and the body is the fresh view
+    finally:
+        gw.stop()
+        monitor.close()
+
+
+# ======================================================================
+# live gateway: WebSocket
+# ======================================================================
+
+def test_ws_handshake_hello_and_broadcast(served):
+    td, monitor, gw = served
+    s, dec, hello = _ws_connect(gw.endpoint)
+    assert hello["frames"] == monitor.frames_ingested
+    gw.publish_frame(2, 17, 3, severity=5)
+    (msg,) = _recv_msgs(s, dec, 1)
+    assert json.loads(msg.data) == {
+        "type": "frame", "rank": 2, "step": 17, "n_anomalies": 3,
+        "severity": 5}
+    s.close()
+    _wait(lambda: gw.n_viewers == 0, what="viewer cleanup")
+
+
+def test_ws_bad_handshakes(served):
+    td, monitor, gw = served
+    cases = [
+        # upgrade at a non-/ws path
+        (b"GET /series HTTP/1.1\r\nHost: t\r\nUpgrade: websocket\r\n"
+         b"Connection: Upgrade\r\nSec-WebSocket-Key: aGVsbG8=\r\n"
+         b"Sec-WebSocket-Version: 13\r\n\r\n", 404),
+        # missing key
+        (b"GET /ws HTTP/1.1\r\nHost: t\r\nUpgrade: websocket\r\n"
+         b"Connection: Upgrade\r\nSec-WebSocket-Version: 13\r\n\r\n", 400),
+        # wrong version
+        (b"GET /ws HTTP/1.1\r\nHost: t\r\nUpgrade: websocket\r\n"
+         b"Connection: Upgrade\r\nSec-WebSocket-Key: aGVsbG8=\r\n"
+         b"Sec-WebSocket-Version: 8\r\n\r\n", 426),
+        # plain GET /ws without upgrade headers: not a WS endpoint via HTTP
+        (b"GET /ws HTTP/1.1\r\nHost: t\r\n\r\n", 404),
+    ]
+    for raw, want in cases:
+        s = socket.create_connection(gw.endpoint, timeout=10)
+        s.sendall(raw)
+        status, _h, _b, _r = _read_response(s)
+        assert status == want, raw[:40]
+        s.close()
+
+
+def test_ws_ping_pong_and_close_echo(served):
+    td, monitor, gw = served
+    s, dec, _h = _ws_connect(gw.endpoint)
+    s.sendall(W.encode_frame(W.OP_PING, b"token", mask=os.urandom(4)))
+    (pong,) = _recv_msgs(s, dec, 1)
+    assert (pong.opcode, pong.data) == (W.OP_PONG, b"token")
+    s.sendall(W.encode_close(1001, "going away", mask=os.urandom(4)))
+    (close,) = _recv_msgs(s, dec, 1)
+    assert close.opcode == W.OP_CLOSE and close.close_code == 1001
+    assert s.recv(65536) == b""  # server closed after the echo
+    s.close()
+
+
+@pytest.mark.parametrize("wire,code", [
+    (W.encode_frame(W.OP_TEXT, b"x"), 1002),                  # unmasked
+    (W.encode_frame(0x7, b"x", mask=b"abcd"), 1002),          # bad opcode
+    (W.encode_frame(W.OP_TEXT, b"\xff\xfe", mask=b"abcd"), 1007),
+    (struct.pack("!BBQ", 0x82, 0x80 | 127, 1 << 40) + b"abcd", 1009),
+])
+def test_ws_violation_gets_close_code_and_gateway_survives(served, wire, code):
+    td, monitor, gw = served
+    s, dec, _h = _ws_connect(gw.endpoint)
+    s.sendall(wire)
+    (close,) = _recv_msgs(s, dec, 1)
+    assert close.opcode == W.OP_CLOSE and close.close_code == code
+    assert s.recv(65536) == b""
+    s.close()
+    # the loop survived: both protocols still served
+    status, _h2, _b = _get(gw.endpoint, "/dashboard")
+    assert status == 200
+    s2, dec2, _h3 = _ws_connect(gw.endpoint)
+    s2.close()
+
+
+# ======================================================================
+# load / concurrency
+# ======================================================================
+
+def test_many_viewers_identical_sequences(served):
+    """8 concurrent viewers each receive the full broadcast sequence, in
+    order, byte-identical."""
+    td, monitor, gw = served
+    viewers = [_ws_connect(gw.endpoint) for _ in range(8)]
+    _wait(lambda: gw.n_viewers >= 8, what="viewer registration")
+    n_msgs = 50
+    for i in range(n_msgs):
+        gw.publish_frame(i % 4, i, i % 3, severity=i % 7)
+    results = {}
+    errors = []
+
+    def _drain(idx, s, dec):
+        try:
+            msgs = _recv_msgs(s, dec, n_msgs)
+            results[idx] = [m.data for m in msgs]
+        except Exception as e:  # noqa: BLE001
+            errors.append((idx, e))
+
+    threads = [threading.Thread(target=_drain, args=(i, s, dec))
+               for i, (s, dec, _h) in enumerate(viewers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert len(results) == 8
+    ref = results[0]
+    assert len(ref) == n_msgs
+    assert json.loads(ref[0])["step"] == 0  # in-order delivery
+    assert json.loads(ref[-1])["step"] == n_msgs - 1
+    for idx, seq in results.items():
+        assert seq == ref, f"viewer {idx} diverged"
+    for s, _d, _h in viewers:
+        s.close()
+    _wait(lambda: gw.n_viewers == 0, what="viewer cleanup")
+
+
+def test_slow_reader_backpressure_pause_resume(tmp_path):
+    """A viewer that stops reading trips the pause counter; fast viewers
+    keep receiving; once the slow one drains, the resume counter fires and
+    it still gets the complete sequence."""
+    monitor = _run_monitor(str(tmp_path), n_ranks=1, steps=2)
+    gw = VizGateway(monitor, high_water=64 << 10, low_water=8 << 10,
+                    ws_kill_water=1 << 30).start()
+    try:
+        slow = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        slow.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 8 << 10)
+        slow.connect(gw.endpoint)
+        key = base64.b64encode(os.urandom(16)).decode()
+        slow.sendall((f"GET /ws HTTP/1.1\r\nHost: t\r\nUpgrade: websocket\r\n"
+                      f"Connection: Upgrade\r\nSec-WebSocket-Key: {key}\r\n"
+                      f"Sec-WebSocket-Version: 13\r\n\r\n").encode())
+        fast_s, fast_dec, _h = _ws_connect(gw.endpoint)
+        _wait(lambda: gw.n_viewers == 2, what="both viewers")
+        pauses0 = gw.backpressure_pauses
+        # Publish until the slow viewer (not reading) trips the high
+        # watermark.  The count is open-ended because the kernel's socket
+        # buffers absorb an unpredictable amount before the userspace
+        # queue starts growing.
+        pad = "x" * 32768
+        n_msgs = 0
+        deadline = time.monotonic() + 20
+        while gw.backpressure_pauses == pauses0 or n_msgs < 10:
+            assert time.monotonic() < deadline, "pause counter never tripped"
+            gw.publish({"type": "frame", "i": n_msgs, "pad": pad})
+            n_msgs += 1
+            time.sleep(0.001)
+        assert gw.backpressure_pauses > pauses0
+        # ...while the fast viewer receives everything regardless
+        fast = _recv_msgs(fast_s, fast_dec, n_msgs, timeout=30)
+        assert [json.loads(m.data)["i"] for m in fast] == list(range(n_msgs))
+        # now the slow one drains: resume fires, full sequence delivered
+        resumes0 = gw.backpressure_resumes
+        status, hdrs, rest = _read_head(slow)
+        assert status == 101
+        slow_dec = W.WSDecoder(require_mask=False)
+        msgs = slow_dec.feed(rest)
+        while len(msgs) < n_msgs + 1:  # hello + broadcasts
+            msgs.extend(slow_dec.feed(slow.recv(1 << 20)))
+        assert json.loads(msgs[0].data)["type"] == "hello"
+        assert [json.loads(m.data)["i"] for m in msgs[1:]] == list(range(n_msgs))
+        assert gw.backpressure_resumes > resumes0
+        slow.close()
+        fast_s.close()
+    finally:
+        gw.stop()
+        monitor.close()
+
+
+def test_mid_broadcast_client_kill_leaves_gateway_serving(served):
+    """A viewer dying abruptly (RST) mid-broadcast is reaped; the other
+    viewers and the HTTP side keep working."""
+    td, monitor, gw = served
+    victim_s, _victim_dec, _h = _ws_connect(gw.endpoint)
+    keeper_s, keeper_dec, _h2 = _ws_connect(gw.endpoint)
+    _wait(lambda: gw.n_viewers == 2, what="both viewers")
+    # abortive close: RST instead of FIN
+    victim_s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                        struct.pack("ii", 1, 0))
+    victim_s.close()
+    for i in range(20):
+        gw.publish_frame(0, i, 0)
+    msgs = _recv_msgs(keeper_s, keeper_dec, 20)
+    assert [json.loads(m.data)["step"] for m in msgs] == list(range(20))
+    _wait(lambda: gw.n_viewers == 1, what="victim reaped")
+    status, _h3, _b = _get(gw.endpoint, "/dashboard")
+    assert status == 200
+    keeper_s.close()
+    _wait(lambda: gw.n_viewers == 0, what="viewer cleanup")
+
+
+def test_hopeless_viewer_shed_with_1013(tmp_path):
+    """A viewer whose queue blows past ws_kill_water is dropped with
+    close code 1013 (try again later) and counted."""
+    monitor = _run_monitor(str(tmp_path), n_ranks=1, steps=2)
+    gw = VizGateway(monitor, high_water=16 << 10, low_water=4 << 10,
+                    ws_kill_water=32 << 10).start()
+    try:
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4 << 10)
+        s.connect(gw.endpoint)
+        key = base64.b64encode(os.urandom(16)).decode()
+        s.sendall((f"GET /ws HTTP/1.1\r\nHost: t\r\nUpgrade: websocket\r\n"
+                   f"Connection: Upgrade\r\nSec-WebSocket-Key: {key}\r\n"
+                   f"Sec-WebSocket-Version: 13\r\n\r\n").encode())
+        _wait(lambda: gw.n_viewers == 1, what="viewer registration")
+        pad = "y" * 8192
+        deadline = time.monotonic() + 20
+        while gw.viewers_dropped == 0:
+            assert time.monotonic() < deadline, "viewer never shed"
+            gw.publish({"type": "frame", "pad": pad})
+            time.sleep(0.002)
+        # drain as a client: the tail of the stream must be close(1013)
+        status, hdrs, rest = _read_head(s)
+        assert status == 101
+        dec = W.WSDecoder(require_mask=False)
+        msgs = dec.feed(rest)
+        s.settimeout(5)
+        closed = None
+        try:
+            while True:
+                data = s.recv(1 << 20)
+                if not data:
+                    break
+                msgs.extend(dec.feed(data))
+        except socket.timeout:
+            pass
+        closes = [m for m in msgs if m.opcode == W.OP_CLOSE]
+        assert closes and closes[-1].close_code == W.CLOSE_TRY_AGAIN
+        s.close()
+        # gateway still serves after shedding
+        st, _h, _b = _get(gw.endpoint, "/dashboard")
+        assert st == 200
+    finally:
+        gw.stop()
+        monitor.close()
+
+
+# ======================================================================
+# replay mode + CLI
+# ======================================================================
+
+def test_replay_gateway_matches_live(tmp_path):
+    """A gateway over a *finished* run dir serves the same /trace bytes
+    (and sane views) as the live monitor did."""
+    td = str(tmp_path)
+    monitor = _run_monitor(td, n_ranks=2, steps=6)
+    live_viz = VizServer(monitor)
+    live_dash = live_viz.rank_dashboard()
+    live_series = live_viz.frame_series(1)
+    monitor.close()
+    replay = ReplayMonitor(td)
+    assert replay.frames_ingested == 12
+    gw = VizGateway(replay).start()
+    try:
+        st, _h, body = _get(gw.endpoint, "/trace")
+        assert st == 200 and body == _offline_bytes(td)
+        st, _h, body = _get(gw.endpoint, "/dashboard")
+        assert json.loads(body) == json.loads(json.dumps(live_dash))
+        st, _h, body = _get(gw.endpoint, "/series?rank=1")
+        assert json.loads(body) == json.loads(json.dumps(live_series))
+        st, _h, body = _get(gw.endpoint, "/provenance")
+        doc = json.loads(body)
+        assert doc["n_total"] == len(replay.provdb)
+    finally:
+        gw.stop()
+
+
+def test_replay_cli_subprocess(tmp_path):
+    """`python -m repro.viz.gateway <dir>` boots, prints its endpoint, and
+    serves /trace byte-identical to the offline export."""
+    td = str(tmp_path)
+    monitor = _run_monitor(td, n_ranks=2, steps=5)
+    monitor.close()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.viz.gateway", td, "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, env=env, text=True)
+    try:
+        banner = proc.stdout.readline()
+        assert "viz gateway: http://" in banner, banner
+        url = banner.split("http://")[1].split("/")[0]
+        host, port = url.split(":")
+        endpoint = (host, int(port))
+        st, _h, body = _get(endpoint, "/trace")
+        assert st == 200 and body == _offline_bytes(td)
+        st, _h, body = _get(endpoint, "/dashboard")
+        assert st == 200 and json.loads(body)
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
+def test_monitor_viz_serve_wiring(tmp_path):
+    """ChimbukoMonitor(viz_serve=0): gateway up at construction, one
+    broadcast per ingest, stopped by close()."""
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.trace.monitor import ChimbukoMonitor
+
+    spec = nwchem_like(anomaly_rate=0.02)
+    gen = WorkloadGenerator(spec, n_ranks=1, seed=1)
+    monitor = ChimbukoMonitor(num_funcs=len(gen.registry),
+                              registry=gen.registry, min_samples=20,
+                              viz_serve=0)
+    gw = monitor.viz_gateway
+    assert gw is not None
+    s, dec, hello = _ws_connect(gw.endpoint)
+    assert hello["frames"] == 0
+    for step in range(3):
+        frame, _ = gen.frame(0, step)
+        monitor.ingest(frame)
+    msgs = _recv_msgs(s, dec, 3)
+    assert [json.loads(m.data)["step"] for m in msgs] == [0, 1, 2]
+    assert all(json.loads(m.data)["type"] == "frame" for m in msgs)
+    assert "viz_endpoint" in monitor.summary()
+    s.close()
+    monitor.close()
+    assert monitor.viz_gateway is None
+    with pytest.raises(OSError):
+        socket.create_connection(gw.endpoint, timeout=1)
