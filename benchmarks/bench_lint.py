@@ -1,0 +1,55 @@
+"""Static-analyzer throughput: full repro.lint pass over ``src/``.
+
+The lint gate runs on every CI push ahead of the test suite, so its cost
+is pure latency in the feedback loop — this harness times the end-to-end
+pass (parse → call graph → rules) over the real tree and asserts it stays
+comfortably interactive (< 10 s; it measures ~0.3 s on a CI-class host).
+
+Rows:
+
+  * ``lint_full_pass`` — one analyze() of ``src/``, us per pass; derived
+    column is ``files=<n>;findings=<m>`` for the scanned tree.
+  * ``lint_per_file`` — the same pass amortized per scanned module.
+
+    PYTHONPATH=src python benchmarks/bench_lint.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.lint.model import load_project
+from repro.lint.rules import analyze
+
+BUDGET_S = 10.0
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single repetition (CI)")
+    args = ap.parse_args(argv)
+    reps = 1 if args.smoke else 3
+
+    n_files = len(load_project(_SRC).modules)
+
+    best = float("inf")
+    findings = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        findings = analyze(_SRC)
+        best = min(best, time.perf_counter() - t0)
+
+    assert best < BUDGET_S, (
+        f"lint pass took {best:.2f}s — over the {BUDGET_S:.0f}s gate budget"
+    )
+    us = best * 1e6
+    print(f"lint_full_pass,{us:.0f},files={n_files};findings={len(findings)}")
+    print(f"lint_per_file,{us / max(n_files, 1):.1f},budget_s={BUDGET_S:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   viz_gateway       HTTP view / /trace / WebSocket fan-out serving (§IV)
   kernels           Pallas-vs-XLA micro-benchmarks
   roofline          per-cell roofline terms from the dry-run artifacts
+  lint              repro.lint full-pass latency over src/ (gate budget)
 """
 from __future__ import annotations
 
@@ -33,6 +34,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_ad_scaling,
         bench_kernels,
+        bench_lint,
         bench_net_federation,
         bench_overhead,
         bench_provdb_sharding,
@@ -47,7 +49,7 @@ def main(argv=None) -> None:
     for mod in (bench_ad_scaling, bench_overhead, bench_reduction,
                 bench_ps_sharding, bench_provdb_sharding,
                 bench_net_federation, bench_viz_gateway, bench_kernels,
-                bench_roofline):
+                bench_roofline, bench_lint):
         try:
             if mod is bench_net_federation and args.net_json:
                 mod.main(["--json", args.net_json])

@@ -33,6 +33,7 @@ shard for a :mod:`repro.net` remote stub hosted by a
 ``repro.launch.shard_server`` worker, byte-matched against local mode
 (docs/net.md).
 """
+# lint: deterministic — byte-identical output across shard counts/transports
 from __future__ import annotations
 
 import glob
@@ -55,7 +56,7 @@ from .events import FunctionRegistry
 def static_provenance(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Static run information (TAU-collected in the paper)."""
     info = {
-        "timestamp": time.time(),
+        "timestamp": time.time(),  # lint: ignore[det-wallclock] — run metadata header, captured once; never in record bodies
         "hostname": platform.node(),
         "platform": platform.platform(),
         "python": sys.version.split()[0],
@@ -311,7 +312,7 @@ class ProvenanceShard:
         if func is not None:
             self._by_func.setdefault(str(func), []).append(pos)
         self._by_severity.setdefault(int(doc.get("severity", 0)), []).append(pos)
-        self._entry.append(int(a["entry"]))
+        self._entry.append(int(a["entry"]))  # lint: ignore[lockset-mixed] — append-only; _time_index snapshots a stable prefix under _order_lock
         self._exit.append(int(a["exit"]))
         with self._order_lock:
             self._order = None

@@ -88,7 +88,11 @@ class AnomalyFeed:
             cb({"rank": rank, "step": step, "n_anomalies": n_anomalies})
 
     def subscribe(self, cb: Callable[[dict], None]) -> None:
-        self._subscribers.append(cb)
+        # Under _feed_lock: report_anomalies snapshots this list from the
+        # feed thread concurrently with subscribers arriving from the
+        # main/viz threads (repro.lint: lockset-mixed).
+        with self._feed_lock:
+            self._subscribers.append(cb)
 
     # ------------------------------------------------------------------ viz
     def rank_dashboard(self) -> Dict[int, Dict[str, float]]:
@@ -169,7 +173,7 @@ class PSShard:
         # refresh: every row a push touches since the last delta peek.
         self._dirty = np.zeros(self.stats.num_funcs, bool)
 
-    def _grow_locked(self, num_rows: int) -> None:
+    def _grow_locked(self, num_rows: int) -> None:  # lint: ignore[lockset-mixed] — caller holds self.lock (grow/push* take it before dispatching here)
         self.stats.grow(num_rows)
         if self.stats.num_funcs > len(self._dirty):
             grown = np.zeros(self.stats.num_funcs, bool)

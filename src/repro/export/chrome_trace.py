@@ -32,6 +32,7 @@ function of the record stream.  :func:`validate_trace` is the schema lock the
 tests and CI enforce — per-track B/E balance, name-matched nesting,
 non-decreasing duration timestamps, matched async pairs.
 """
+# lint: deterministic — byte-identical output across shard counts/transports
 from __future__ import annotations
 
 import gzip

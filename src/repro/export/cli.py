@@ -23,6 +23,7 @@ Three modes:
 
         python -m repro.export --validate trace.json
 """
+# lint: deterministic — byte-identical output across shard counts/transports
 from __future__ import annotations
 
 import argparse

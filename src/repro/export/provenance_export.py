@@ -15,6 +15,7 @@ ordered by their global ingest ``seq``, which the federation assigns
 identically at any shard count over any transport (core/provenance.py), so
 the emitted trace is byte-identical for the same logical run.
 """
+# lint: deterministic — byte-identical output across shard counts/transports
 from __future__ import annotations
 
 import glob

@@ -24,6 +24,7 @@ shard counts and transports, which is what makes the export byte-identical
 across topologies); ``new_funcs`` carries each function name the first time
 one of its records appears, so a single forward pass can name every event.
 """
+# lint: deterministic — byte-identical output across shard counts/transports
 from __future__ import annotations
 
 import json

@@ -135,7 +135,7 @@ class RPCClient:
             self._connect()
 
     # ------------------------------------------------------------ connection
-    def _connect(self) -> None:
+    def _connect(self) -> None:  # lint: ignore[lockset-mixed] — caller holds _lock
         """Dial + handshake synchronously; caller holds ``_lock``."""
         if self._closed:
             raise ConnectionLost(f"client for {self.endpoint} is closed")
@@ -185,7 +185,7 @@ class RPCClient:
             name=f"rpc-reader:{self.endpoint[1]}",
         ).start()
 
-    def _send_locked(
+    def _send_locked(  # lint: ignore[lockset-mixed] — caller holds _lock
         self,
         method_id: int,
         env: dict,
@@ -231,7 +231,7 @@ class RPCClient:
             raise ConnectionLost(f"send to {self.endpoint} failed: {e}") from e
         return fut
 
-    def _flush_sends_locked(self) -> None:
+    def _flush_sends_locked(self) -> None:  # lint: ignore[lockset-mixed] — caller holds _lock
         buf, self._sendbuf = self._sendbuf, bytearray()
         self._sock.sendall(buf)
 

@@ -50,6 +50,7 @@ import socket
 import threading
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from ..lint import runtime as san
 from .framing import (
     ERROR,
     METHOD_RESOLVE,
@@ -223,6 +224,11 @@ class EventLoopServer:
         self._worker_threads: List[threading.Thread] = []
         self._loop_thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
+        # Public observability counters: incremented on the loop thread,
+        # polled cross-thread (tests, benches, the future autoscaler), so
+        # updates take _stats_lock — a bare += is a read-modify-write that
+        # can drop counts under contention (repro.lint: lockset-counter).
+        self._stats_lock = threading.Lock()
         self.backpressure_pauses = 0  # observability: slow-reader pauses taken
         self.backpressure_resumes = 0  # ... and drains back under low water
 
@@ -261,6 +267,16 @@ class EventLoopServer:
     def stop(self) -> None:
         self._stopping.set()
         self._wake()
+        if self._loop_thread is None:
+            # Never started: the loop's teardown (which normally owns the
+            # sockets' lifecycle) will never run — release the fds here.
+            self._force_close(self._sock)
+            self._force_close(self._wake_r)
+            self._force_close(self._wake_w)
+            try:
+                self._sel.close()
+            except OSError:
+                pass
         if self._loop_thread is not None:
             self._loop_thread.join(timeout=5)
         # Normally the loop thread tore everything down on exit.  If it is
@@ -365,6 +381,8 @@ class EventLoopServer:
             self._sel.register(sock, selectors.EVENT_READ, conn)
 
     def _service(self, conn: EventLoopConn, mask: int) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         if conn.closed:
             return
         if mask & selectors.EVENT_WRITE:
@@ -385,6 +403,8 @@ class EventLoopServer:
 
     # --------------------------------------------------------------- writes
     def _send(self, conn: EventLoopConn, data: bytes, flush: bool = True) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         if conn.closed:
             return
         conn.outq.append(memoryview(data))
@@ -397,6 +417,8 @@ class EventLoopServer:
             self._update_events(conn)
 
     def _flush_out(self, conn: EventLoopConn) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         while conn.outq:
             if len(conn.outq) > 1 and len(conn.outq[0]) < (32 << 10):
                 # Coalesce queued small replies into one send() — the
@@ -432,14 +454,18 @@ class EventLoopServer:
     def _update_events(self, conn: EventLoopConn) -> None:
         """Recompute the selector interest set: READ unless backpressured,
         WRITE while responses are queued."""
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         if conn.closed:
             return
         if not conn.paused and conn.out_bytes > self._high_water:
             conn.paused = True
-            self.backpressure_pauses += 1
+            with self._stats_lock:
+                self.backpressure_pauses += 1
         elif conn.paused and conn.out_bytes <= self._low_water:
             conn.paused = False
-            self.backpressure_resumes += 1
+            with self._stats_lock:
+                self.backpressure_resumes += 1
         events = selectors.EVENT_WRITE if conn.outq else 0
         # Inbound backpressure: the protocol may additionally gate reads
         # (e.g. requests buffered behind an in-flight heavy handler).
@@ -461,6 +487,8 @@ class EventLoopServer:
                 self._close_conn(conn)
 
     def _close_conn(self, conn: EventLoopConn) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         if conn.closed:
             return
         conn.closed = True
@@ -535,6 +563,8 @@ class RPCServer(EventLoopServer):
         Replies are queued and flushed once at the end: requests that
         arrived coalesced (a client's send buffer) answer in one syscall.
         """
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         while conn.pending and not conn.busy and not conn.closed:
             frame = conn.pending.popleft()
             if frame.kind != REQUEST:
@@ -563,10 +593,14 @@ class RPCServer(EventLoopServer):
 
     def _run_heavy(self, conn: _RPCConn, name: str, fn: Handler, frame: Frame) -> None:
         """Worker-side: execute, then post the completion back to the loop."""
+        if san.ENABLED:
+            san.assert_worker_thread(self)
         reply = _run_method(name, fn, frame)
         self._post(lambda: self._complete_heavy(conn, reply))
 
     def _complete_heavy(self, conn: _RPCConn, reply: Optional[bytes]) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         conn.busy = False
         if conn.closed:
             return  # connection died while the handler ran

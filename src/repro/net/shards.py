@@ -89,14 +89,19 @@ class PSShardService:
         )
         return {}, ()
 
+    # Handlers bind the shard through an annotated local: the annotation is
+    # what lets repro.lint resolve `shard.push(...)` to PSShard (not the
+    # same-named client wrappers) when classifying thread contexts.
     def _push(self, env, arrays):
-        _require(self._shard, "ps").push(np.asarray(arrays[0], dtype=np.float64))
+        shard: PSShard = _require(self._shard, "ps")
+        shard.push(np.asarray(arrays[0], dtype=np.float64))
         return {}, ()
 
     def _push_rows(self, env, arrays):
         # Sparse push: only the delta's non-empty rows travel; rows_total
         # carries the full slice length so growth matches the dense path.
-        _require(self._shard, "ps").push_rows(
+        shard: PSShard = _require(self._shard, "ps")
+        shard.push_rows(
             np.asarray(arrays[0], dtype=np.int64),
             np.asarray(arrays[1], dtype=np.float64),
             int(env["rows_total"]),
@@ -104,13 +109,15 @@ class PSShardService:
         return {}, ()
 
     def _grow(self, env, arrays):
-        _require(self._shard, "ps").grow(int(env["num_rows"]))
+        shard: PSShard = _require(self._shard, "ps")
+        shard.grow(int(env["num_rows"]))
         return {}, ()
 
     def _peek_table(self, env, arrays):
         # Locked copy: push_rows mutates the table in place, and this
         # handler runs on a worker thread concurrent with inline pushes.
-        return {}, (_require(self._shard, "ps").peek_table_locked(),)
+        shard: PSShard = _require(self._shard, "ps")
+        return {}, (shard.peek_table_locked(),)
 
     def _peek_rows(self, env, arrays):
         # Dirty-row delta peek (federation aggregate refresh): ships only
@@ -118,11 +125,12 @@ class PSShardService:
         # PSShard.peek_rows takes the shard lock, so the worker-thread read
         # is consistent with inline pushes; connection FIFO guarantees it
         # reflects every push that preceded it on the caller's connection.
-        idx, rows = _require(self._shard, "ps").peek_rows()
+        shard: PSShard = _require(self._shard, "ps")
+        idx, rows = shard.peek_rows()
         return {}, (idx, rows)
 
     def _stats(self, env, arrays):
-        shard = _require(self._shard, "ps")
+        shard: PSShard = _require(self._shard, "ps")
         return {
             "n_pushes": shard.n_pushes,
             "num_funcs": shard.stats.num_funcs,
@@ -148,15 +156,21 @@ class ProvenanceShardService:
         self._lock = threading.Lock()
 
     def register(self, table: MethodTable) -> "ProvenanceShardService":
-        table.register("prov.configure", self._configure)
+        # configure/flush/close hit the filesystem (mkdir/open/flush/close)
+        # and so must not run inline on the event-loop thread: one slow disk
+        # would stall every connection (repro.lint: loop-blocking-io).
+        # Heavy offload is safe because _drain_pending keeps per-connection
+        # FIFO across light/heavy handlers — a connection's add after its
+        # configure still executes after it.
+        table.register("prov.configure", self._configure, heavy=True)
         table.register("prov.add", self._add)
         table.register("prov.add_many", self._add_many)
         table.register("prov.query", self._query, heavy=True)
         table.register("prov.take_resumed", self._take_resumed, heavy=True)
         table.register("prov.dump", self._dump, heavy=True)
         table.register("prov.len", self._len)
-        table.register("prov.flush", self._flush)
-        table.register("prov.close", self._close)
+        table.register("prov.flush", self._flush, heavy=True)
+        table.register("prov.close", self._close, heavy=True)
         return self
 
     def _configure(self, env, arrays):
@@ -172,7 +186,8 @@ class ProvenanceShardService:
 
     def _add(self, env, arrays):
         with self._lock:
-            _require(self._shard, "prov").add(
+            shard: ProvenanceShard = _require(self._shard, "prov")
+            shard.add(
                 env["doc"], int(env["seq"]), write=bool(env.get("write", True))
             )
         return {}, ()
@@ -186,7 +201,7 @@ class ProvenanceShardService:
         duplicates a doc or a JSONL line.
         """
         with self._lock:
-            shard = _require(self._shard, "prov")
+            shard: ProvenanceShard = _require(self._shard, "prov")
             write = bool(env.get("write", True))
             for doc, seq in zip(env["docs"], env["seqs"]):
                 shard.add(doc, int(seq), write=write)
@@ -195,7 +210,8 @@ class ProvenanceShardService:
     def _query(self, env, arrays):
         # Lock-free read: shard structures are append-only and positions are
         # published only after their doc/seq are in place.
-        hits = _require(self._shard, "prov").query(
+        shard: ProvenanceShard = _require(self._shard, "prov")  # lint: ignore[lockset-mixed] — deliberate lock-free reference read; see contract above
+        hits = shard.query(
             rank=env.get("rank"), fid=env.get("fid"), step=env.get("step"),
             t0=env.get("t0"), t1=env.get("t1"), func=env.get("func"),
             severity=env.get("severity"), min_severity=env.get("min_severity"),
@@ -204,21 +220,24 @@ class ProvenanceShardService:
 
     def _take_resumed(self, env, arrays):
         with self._lock:  # mutation (swaps the resumed list), but O(1)
-            return {"docs": _require(self._shard, "prov").take_resumed()}, ()
+            shard: ProvenanceShard = _require(self._shard, "prov")
+            return {"docs": shard.take_resumed()}, ()
 
     def _dump(self, env, arrays):
         # Lock-free read; zip truncates to the shorter list, so a racing
         # add can only make the dump a consistent prefix.
-        shard = _require(self._shard, "prov")
+        shard: ProvenanceShard = _require(self._shard, "prov")  # lint: ignore[lockset-mixed] — deliberate lock-free reference read; see contract above
         return {"hits": [[seq, doc] for seq, doc in zip(shard.seqs, shard.docs)]}, ()
 
     def _len(self, env, arrays):
         with self._lock:
-            return {"n": len(_require(self._shard, "prov"))}, ()
+            shard: ProvenanceShard = _require(self._shard, "prov")
+            return {"n": len(shard)}, ()
 
     def _flush(self, env, arrays):
         with self._lock:
-            _require(self._shard, "prov").flush()
+            shard: ProvenanceShard = _require(self._shard, "prov")
+            shard.flush()
         return {}, ()
 
     def _close(self, env, arrays):
@@ -257,7 +276,7 @@ class _InflightWindow:
         self._futs: Deque[concurrent.futures.Future] = collections.deque()
         self._lock = threading.Lock()
 
-    def _pop_done_locked(self) -> List[concurrent.futures.Future]:
+    def _pop_done_locked(self) -> List[concurrent.futures.Future]:  # lint: ignore[lockset-mixed] — caller holds self._lock (admit/drain/reap)
         done = []
         while self._futs and self._futs[0].done():
             done.append(self._futs.popleft())

@@ -43,6 +43,7 @@ from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.lint import runtime as san
 from repro.net.server import EventLoopConn, EventLoopServer
 
 from . import http as H
@@ -121,7 +122,9 @@ class _TraceStream:
     def _emit(self) -> None:
         data = H.chunk(bytes(self._buf))
         del self._buf[:]
-        self.sent += len(data)
+        # Single-writer counter: only this stream's own worker thread ever
+        # increments; cross-thread readers are monitoring-only.
+        self.sent += len(data)  # lint: ignore[lockset-counter]
         self._post_bytes(data)
 
     def _post_bytes(self, data: bytes) -> None:
@@ -194,7 +197,12 @@ class VizGateway(EventLoopServer):
         })
 
     def _broadcast(self, frame: bytes) -> None:
-        self.broadcasts += 1
+        if san.ENABLED:
+            san.assert_loop_thread(self)
+        # _stats_lock (from EventLoopServer): these public counters are
+        # polled cross-thread by tests and monitoring.
+        with self._stats_lock:
+            self.broadcasts += 1
         for conn in list(self._viewers):
             if conn.closed:
                 self._viewers.discard(conn)
@@ -202,7 +210,8 @@ class VizGateway(EventLoopServer):
             if conn.ws_closing:
                 continue
             if conn.out_bytes > self._ws_kill_water:
-                self.viewers_dropped += 1
+                with self._stats_lock:
+                    self.viewers_dropped += 1
                 self._ws_fail(conn, W.CLOSE_TRY_AGAIN, "viewer too far behind")
                 continue
             self._send(conn, frame)
@@ -243,6 +252,8 @@ class VizGateway(EventLoopServer):
         self._send(conn, H.error_response(err))
 
     def _drain_requests(self, conn: _VizConn) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         while (conn.requests and not conn.busy and not conn.closed
                and not conn.ws_closing and conn.mode == "http"):
             req = conn.requests.popleft()
@@ -296,53 +307,61 @@ class VizGateway(EventLoopServer):
                 lambda: self.viz.provenance_view(limit=limit, **q),
             ))
             return
-        body = self._view_body(path, req)
-        self._finish_response(
-            conn, req,
-            H.build_response(200, body, headers=(("ETag", etag),),
-                             keep_alive=req.keep_alive),
-        )
-
-    def _view_body(self, path: str, req: H.HttpRequest) -> bytes:
-        """The light (loop-inline) endpoints; raises HttpError(404) else."""
         if path == "/":
-            return _dumps({
+            # Pure loop-owned counters: the only view that stays inline.
+            body = _dumps({
                 "service": "repro.viz.gateway",
                 "endpoints": ["/dashboard", "/series", "/function",
                               "/callstack", "/provenance", "/trace", "/ws"],
                 "frames": int(getattr(self.monitor, "frames_ingested", 0)),
                 "viewers": len(self._viewers),
             })
+            self._finish_response(
+                conn, req,
+                H.build_response(200, body, headers=(("ETag", etag),),
+                                 keep_alive=req.keep_alive),
+            )
+            return
+        # Views touch the stores behind VizServer — on a live federation
+        # that means blocking RPC round-trips, which must never run on the
+        # loop thread (repro.lint: loop-blocking-sync/-socket).  Parameter
+        # validation happens here (inline 400/404), the store work runs on
+        # a worker via the thunk.
+        view = self._view_thunk(path, req)
+        conn.busy = True
+        self._offload(lambda: self._run_heavy_json(conn, req, etag, view))
+
+    def _view_thunk(self, path: str, req: H.HttpRequest):
+        """Validate a view request inline; return the worker-side thunk.
+
+        Raises HttpError(400/404) on the loop thread so protocol errors
+        keep their status codes instead of surfacing as worker 500s.
+        """
         if path == "/dashboard":
             stat = req.param("stat", "stddev")
             if stat not in _DASH_STATS:
                 raise H.HttpError(400, f"unknown dashboard stat {stat!r}")
-            return _dumps(self.viz.rank_dashboard(
-                stat=stat,
-                top=_int_param(req, "top", 5),
-                bottom=_int_param(req, "bottom", 5),
-            ))
+            top = _int_param(req, "top", 5)
+            bottom = _int_param(req, "bottom", 5)
+            return lambda: self.viz.rank_dashboard(stat=stat, top=top,
+                                                   bottom=bottom)
         if path == "/series":
-            return _dumps(self.viz.frame_series(
-                _int_param(req, "rank", required=True)
-            ))
+            rank = _int_param(req, "rank", required=True)
+            return lambda: self.viz.frame_series(rank)
         if path == "/function":
             x = req.param("x", "entry")
             y = req.param("y", "fid")
             if x not in _VIEW_AXES or y not in _VIEW_AXES:
                 raise H.HttpError(400, f"unknown axis x={x!r} y={y!r}")
-            return _dumps(self.viz.function_view(
-                _int_param(req, "rank", required=True),
-                _int_param(req, "step", required=True),
-                x=x, y=y,
-            ))
+            rank = _int_param(req, "rank", required=True)
+            step = _int_param(req, "step", required=True)
+            return lambda: self.viz.function_view(rank, step, x=x, y=y)
         if path == "/callstack":
-            return _dumps(self.viz.call_stack_view(
-                _int_param(req, "rank", required=True),
-                _int_param(req, "t0", required=True),
-                _int_param(req, "t1", required=True),
-                fid=_int_param(req, "fid"),
-            ))
+            rank = _int_param(req, "rank", required=True)
+            t0 = _int_param(req, "t0", required=True)
+            t1 = _int_param(req, "t1", required=True)
+            fid = _int_param(req, "fid")
+            return lambda: self.viz.call_stack_view(rank, t0, t1, fid=fid)
         raise H.HttpError(404, f"no endpoint {path!r}")
 
     def _finish_response(self, conn: _VizConn, req: H.HttpRequest,
@@ -356,6 +375,8 @@ class VizGateway(EventLoopServer):
     # connections don't.
     def _run_heavy_json(self, conn: _VizConn, req: H.HttpRequest, etag: str,
                         fn) -> None:
+        if san.ENABLED:
+            san.assert_worker_thread(self)
         try:
             resp = H.build_response(200, _dumps(fn()), headers=(("ETag", etag),),
                                     keep_alive=req.keep_alive)
@@ -368,6 +389,8 @@ class VizGateway(EventLoopServer):
     def _run_trace(self, conn: _VizConn, req: H.HttpRequest, etag: str) -> None:
         """Worker-side ``/trace``: stream the export through chunked
         transfer with producer-side backpressure (see _TraceStream)."""
+        if san.ENABLED:
+            san.assert_worker_thread(self)
         stream = _TraceStream(self, conn)
         started = False
         try:
@@ -391,6 +414,8 @@ class VizGateway(EventLoopServer):
                 self._post(lambda: self._complete_heavy(conn, resp, close=True))
 
     def _complete_heavy(self, conn: _VizConn, resp: bytes, close: bool) -> None:
+        if san.ENABLED:
+            san.assert_loop_thread(self)
         conn.busy = False
         if conn.closed:
             return

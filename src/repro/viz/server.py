@@ -21,6 +21,7 @@ the PS topology: a sharded ``FederatedPS`` serves them through the same
 ``AnomalyFeed`` interface as the single-instance server, and its stats
 snapshots come from the federation's lock-free aggregation pass.
 """
+# lint: deterministic — byte-identical output across shard counts/transports
 from __future__ import annotations
 
 import json

@@ -1,11 +1,34 @@
-"""Test-collection hygiene.
+"""Test-collection hygiene + runtime hardening for the whole suite.
 
 Several seed test modules import ``hypothesis`` at module scope.  The dev
 dependency set (pyproject.toml ``[dev]``) declares it, but when running in
 an environment without it we skip those modules instead of failing the whole
 collection — the rest of the suite still runs.
+
+Two suite-wide runtime switches live here as well:
+
+* ``REPRO_SANITIZE=1`` turns on :mod:`repro.lint.runtime` before any
+  ``repro`` module is imported, so every event-loop test doubles as a
+  thread-ownership check (loop-owned code on the loop thread, heavy code
+  off it).  Export it as ``0`` beforehand to opt out locally.
+* A :mod:`faulthandler` deadlock watchdog: if any single test runs past
+  ``REPRO_TEST_TIMEOUT`` seconds (default 180), every thread's stack is
+  dumped to stderr and the process exits.  Concurrency bugs in the
+  event-loop stack present as silent hangs; a traceback of the wedged
+  threads beats a CI timeout with no evidence.  Set
+  ``REPRO_TEST_TIMEOUT=0`` to disable (e.g. when stepping through a test
+  in a debugger).
 """
+import faulthandler
 import importlib.util
+import os
+import sys
+
+import pytest
+
+# Must precede the first ``repro`` import anywhere in the test session:
+# repro.lint.runtime reads the variable at import time.
+os.environ.setdefault("REPRO_SANITIZE", "1")
 
 collect_ignore = []
 if importlib.util.find_spec("hypothesis") is None:
@@ -15,3 +38,19 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_stats.py",
         "test_federation_props.py",
     ]
+
+_WATCHDOG_S = float(os.environ.get("REPRO_TEST_TIMEOUT", "180") or "0")
+
+
+@pytest.fixture(autouse=True)
+def _deadlock_watchdog():
+    """Per-test deadline: dump all thread stacks and hard-exit on a hang."""
+    if _WATCHDOG_S <= 0:
+        yield
+        return
+    faulthandler.enable(file=sys.stderr)
+    faulthandler.dump_traceback_later(_WATCHDOG_S, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()

@@ -1,0 +1,13 @@
+"""BAD twin: public observability counter bumped bare on the loop thread."""
+
+
+class EventLoopServer:
+    pass
+
+
+class MeteredServer(EventLoopServer):
+    def _loop(self):
+        self._account()
+
+    def _account(self):
+        self.frames_served += 1  # EXPECT: lockset-counter

@@ -1,0 +1,22 @@
+"""GOOD twin of counter_bad: the public counter takes the stats lock; a
+loop-private tally (underscore name, never read cross-thread) stays bare."""
+import threading
+
+
+class EventLoopServer:
+    pass
+
+
+class MeteredServer(EventLoopServer):
+    def __init__(self):
+        self._stats_lock = threading.Lock()
+        self.frames_served = 0
+        self._spins = 0
+
+    def _loop(self):
+        self._account()
+
+    def _account(self):
+        with self._stats_lock:
+            self.frames_served += 1
+        self._spins += 1  # private: loop-thread-only bookkeeping

@@ -1,0 +1,13 @@
+"""BAD twin: nondeterminism inside a byte-deterministic module."""
+# lint: deterministic — fixture: output must be byte-identical across runs
+import random
+import time
+
+
+def emit(records, out):
+    ranks = {r["rank"] for r in records}
+    for rank in ranks:  # EXPECT: det-unordered-iter
+        out.write(str(rank))
+    header = {"generated": time.time()}  # EXPECT: det-wallclock
+    header["salt"] = random.random()  # EXPECT: det-random
+    return header

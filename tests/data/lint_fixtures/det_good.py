@@ -1,0 +1,15 @@
+"""GOOD twin of det_bad: sorted() pins the iteration order; the header is
+stamped from frame metadata, not the wall clock.  Plain dict iteration is
+insertion-ordered in modern Python and deliberately NOT flagged."""
+# lint: deterministic — fixture: output must be byte-identical across runs
+
+
+def emit(records, out, frame):
+    ranks = {r["rank"] for r in records}
+    for rank in sorted(ranks):
+        out.write(str(rank))
+    by_label = {r["label"]: r for r in records}
+    for label in by_label:  # dict order is deterministic: no finding
+        out.write(label)
+    header = {"generated": frame.step}
+    return header

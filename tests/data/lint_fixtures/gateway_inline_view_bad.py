@@ -1,0 +1,30 @@
+"""Regression fixture: the pre-fix VizGateway shape, distilled.
+
+Before this PR, the gateway's ``_handle_request`` computed view responses
+*inline on the loop thread*; the view layer reaches a blocking federated
+RPC client (``sendall`` / unguarded ``recv``).  One wedged shard then
+stalled every viewer connection.  This fixture reproduces that call chain
+so the test can assert the analyzer would have caught the original bug
+(the shipped gateway now validates inline and offloads the view body).
+"""
+
+
+class EventLoopServer:
+    pass
+
+
+class ShardClient:
+    def fetch(self, name):
+        self.sock.sendall(name)  # EXPECT: loop-blocking-socket
+        return self.sock.recv(1 << 16)  # EXPECT: loop-blocking-socket
+
+
+class Gateway(EventLoopServer):
+    def __init__(self):
+        self.client = ShardClient()
+
+    def _loop(self):
+        self._handle_request(b"/dashboard")
+
+    def _handle_request(self, path):
+        return self.client.fetch(path)  # inline on the loop: the old bug

@@ -1,0 +1,14 @@
+"""BAD twin: a light (inline-on-loop) RPC handler that reaches bulk reads."""
+
+
+class ShardService:
+    def build_table(self, table):
+        table.register("shard.push", self._on_push)
+        table.register("shard.all", self._serve_table)  # EXPECT: loop-heavy-handler
+
+    def _on_push(self, env, arrays):
+        self._n += 1
+
+    def _serve_table(self, env, arrays):
+        # A full-table serialization: far too heavy for the loop thread.
+        return {"rows": self.store.dump_all()}, ()

@@ -1,0 +1,14 @@
+"""GOOD twin of heavy_handler_bad: the bulk handler is heavy=True, so it
+runs on the worker pool; the light push handler touches no bulk reads."""
+
+
+class ShardService:
+    def build_table(self, table):
+        table.register("shard.push", self._on_push)
+        table.register("shard.all", self._serve_table, heavy=True)
+
+    def _on_push(self, env, arrays):
+        self._n += 1
+
+    def _serve_table(self, env, arrays):
+        return {"rows": self.store.dump_all()}, ()

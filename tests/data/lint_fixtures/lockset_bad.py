@@ -1,0 +1,19 @@
+"""BAD twin: lock discipline violated — the same attribute is guarded in
+one method and touched bare in others."""
+import threading
+
+
+class Inbox:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []
+
+    def put(self, x):
+        with self._lock:
+            self.items.append(x)
+
+    def drain(self):
+        return list(self.items)  # EXPECT: lockset-mixed
+
+    def reset(self):
+        self.items = []  # EXPECT: lockset-mixed

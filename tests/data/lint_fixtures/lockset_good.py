@@ -1,0 +1,21 @@
+"""GOOD twin of lockset_bad: every access takes the lock (``__init__``
+construction writes are exempt by definition — no second thread yet)."""
+import threading
+
+
+class Inbox:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []
+
+    def put(self, x):
+        with self._lock:
+            self.items.append(x)
+
+    def drain(self):
+        with self._lock:
+            return list(self.items)
+
+    def reset(self):
+        with self._lock:
+            self.items = []

@@ -1,0 +1,18 @@
+"""BAD twin: filesystem traffic on the event-loop thread."""
+import os
+
+
+class EventLoopServer:
+    pass
+
+
+class SpoolServer(EventLoopServer):
+    def _loop(self):
+        self._rotate("a", "b")
+
+    def _rotate(self, old, new):
+        fh = open(new, "w")  # EXPECT: loop-blocking-io
+        self._log_fh.write("rotated\n")  # EXPECT: loop-blocking-io
+        os.replace(old, new)  # EXPECT: loop-blocking-io
+        self.path.write_text("done")  # EXPECT: loop-blocking-io
+        return fh

@@ -1,0 +1,24 @@
+"""GOOD twin of loop_io_bad: the same filesystem work, offloaded.
+
+Also a false-positive tripwire: ``.write()`` on a receiver that is not
+file-shaped (an in-memory buffer) must stay silent on the loop.
+"""
+import os
+
+
+class EventLoopServer:
+    pass
+
+
+class SpoolServer(EventLoopServer):
+    def _loop(self):
+        self._offload(self._rotate)
+        self.buf.write(b"frame")  # in-memory accumulator: not a file handle
+
+    def _rotate(self):
+        # WORKER context: syscalls belong here.
+        fh = open("b", "w")
+        self._log_fh.write("rotated\n")
+        os.replace("a", "b")
+        self.path.write_text("done")
+        return fh

@@ -1,0 +1,20 @@
+"""BAD twin: time.sleep reachable from the selector loop.
+
+Each hazardous line carries an ``# EXPECT: <rule>`` marker; the test
+parses those markers and asserts the analyzer reports exactly that
+(rule, line) set — no more, no less.
+"""
+import time
+
+
+class EventLoopServer:  # stand-in: matched by name, like the real base
+    pass
+
+
+class PacedServer(EventLoopServer):
+    def _loop(self):
+        while True:
+            self._tick()
+
+    def _tick(self):
+        time.sleep(0.01)  # EXPECT: loop-blocking-sleep

@@ -1,0 +1,16 @@
+"""GOOD twin of loop_sleep_bad: the sleep runs on the worker pool."""
+import time
+
+
+class EventLoopServer:
+    pass
+
+
+class PacedServer(EventLoopServer):
+    def _loop(self):
+        while True:
+            self._offload(self._tick)
+
+    def _tick(self):
+        # WORKER context (seeded through _offload): sleeping is fine here.
+        time.sleep(0.01)

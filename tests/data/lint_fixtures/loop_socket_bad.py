@@ -1,0 +1,17 @@
+"""BAD twin: blocking socket calls on the event-loop thread."""
+import socket
+
+
+class EventLoopServer:
+    pass
+
+
+class PushServer(EventLoopServer):
+    def _loop(self):
+        self._pump()
+
+    def _pump(self):
+        peer = socket.create_connection(("viz", 80))  # EXPECT: loop-blocking-socket
+        peer.sendall(b"frame")  # EXPECT: loop-blocking-socket
+        data = self.sock.recv(4096)  # EXPECT: loop-blocking-socket
+        return data

@@ -1,0 +1,23 @@
+"""GOOD twin of loop_socket_bad: non-blocking recv behind the loop's own
+BlockingIOError idiom; connect/sendall moved to the worker pool."""
+import socket
+
+
+class EventLoopServer:
+    pass
+
+
+class PushServer(EventLoopServer):
+    def _loop(self):
+        self._offload(self._dial)
+        self._pump()
+
+    def _pump(self):
+        try:
+            return self.sock.recv(4096)  # guarded: the loop's own idiom
+        except BlockingIOError:
+            return b""
+
+    def _dial(self):
+        peer = socket.create_connection(("viz", 80))
+        peer.sendall(b"frame")

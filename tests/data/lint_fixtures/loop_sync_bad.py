@@ -1,0 +1,16 @@
+"""BAD twin: synchronization primitives that park the loop thread."""
+
+
+class EventLoopServer:
+    pass
+
+
+class WaityServer(EventLoopServer):
+    def _loop(self):
+        self._gather()
+
+    def _gather(self):
+        out = self.future.result()  # EXPECT: loop-blocking-sync
+        self.done_event.wait()  # EXPECT: loop-blocking-sync
+        self._lock.acquire()  # EXPECT: loop-blocking-sync
+        return out

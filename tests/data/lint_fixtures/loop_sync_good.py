@@ -1,0 +1,18 @@
+"""GOOD twin of loop_sync_bad: non-blocking acquire on the loop; the
+parking waits live on the worker pool."""
+
+
+class EventLoopServer:
+    pass
+
+
+class WaityServer(EventLoopServer):
+    def _loop(self):
+        self._offload(self._gather)
+        if self._lock.acquire(blocking=False):  # try-lock: never parks
+            self._lock.release()
+
+    def _gather(self):
+        out = self.future.result()
+        self.done_event.wait()
+        return out

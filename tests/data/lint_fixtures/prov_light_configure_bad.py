@@ -1,0 +1,21 @@
+"""Regression fixture: the pre-fix provenance-shard registration, distilled.
+
+Before this PR, ``prov.configure`` / ``prov.flush`` / ``prov.close`` were
+registered *light*, so their ``makedirs``/``open``/``flush`` syscalls ran
+inline on the RPC server's loop thread (the shipped shard table now
+registers all three ``heavy=True``)."""
+import os
+
+
+class ProvShard:
+    def build_table(self, table):
+        table.register("prov.configure", self._configure)  # EXPECT: loop-heavy-handler
+
+    def _configure(self, env, arrays):
+        os.makedirs(env["dir"])  # EXPECT: loop-blocking-io
+        self._fh = open(env["path"], "a")  # EXPECT: loop-blocking-io
+        self._export_window()
+        return {}, ()
+
+    def _export_window(self):
+        pass

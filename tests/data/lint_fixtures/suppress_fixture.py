@@ -1,0 +1,24 @@
+"""Suppression mechanics: the same hazards as the bad twins, silenced by
+``# lint: ignore`` comments at line and def granularity."""
+import time
+
+
+class EventLoopServer:
+    pass
+
+
+class QuietServer(EventLoopServer):
+    def _loop(self):
+        self._tick()
+        self._nap()
+        self._account()
+
+    def _tick(self):
+        time.sleep(0.01)  # lint: ignore[loop-blocking-sleep] — fixture: measured pause
+
+    def _nap(self):  # lint: ignore — fixture: whole function waived
+        time.sleep(0.01)
+        self.future.result()
+
+    def _account(self):
+        self.frames += 1  # lint: ignore[lockset-counter] — fixture: single reader

@@ -524,7 +524,8 @@ def test_stream_append_empty_or_missing_starts_fresh(tmp_path):
         w.add_frame(0, 0, _recs([(1, 0, 10, 1)]), {1: "main"},
                     n_records=1, ts=10)
         w.close()
-        lines = open(path).read().splitlines()
+        with open(path) as f:
+            lines = f.read().splitlines()
         assert json.loads(lines[0])["type"] == "header"
         assert len(list(iter_stream_frames(path))) == 1
 

@@ -1,0 +1,269 @@
+"""repro.lint: fixture-driven rule tests, suppressions, baseline, CLI,
+and the runtime thread-ownership sanitizer.
+
+Bad fixtures under ``tests/data/lint_fixtures/`` carry ``# EXPECT: <rule>``
+markers on each hazardous line; the tests assert the analyzer reports
+exactly that (rule, line) set.  Good twins must produce zero findings —
+every one doubles as a false-positive regression test.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.lint import RULE_IDS, baseline as bl, runtime as san
+from repro.lint.rules import analyze
+
+FIXTURES = Path(__file__).parent / "data" / "lint_fixtures"
+REPO = Path(__file__).resolve().parents[1]
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([a-z-]+)")
+
+BAD_FIXTURES = sorted(p.name for p in FIXTURES.glob("*_bad.py"))
+GOOD_FIXTURES = sorted(p.name for p in FIXTURES.glob("*_good.py"))
+
+
+def expected_hits(path: Path):
+    out = set()
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT_RE.search(line)
+        if m:
+            out.add((m.group(1), lineno))
+    return out
+
+
+def actual_hits(path: Path):
+    return {(f.rule, f.line) for f in analyze(str(path))}
+
+
+# --------------------------------------------------------------- rule tests
+def test_fixture_inventory():
+    """Every rule family has at least one bad/good fixture pair, and every
+    EXPECT marker names a real rule id."""
+    assert len(BAD_FIXTURES) >= 6 and len(GOOD_FIXTURES) >= 6
+    covered = set()
+    for name in BAD_FIXTURES:
+        for rule, _line in expected_hits(FIXTURES / name):
+            assert rule in RULE_IDS, f"{name}: unknown rule {rule!r}"
+            covered.add(rule)
+    # Families: loop-hazard, lockset, determinism all represented.
+    assert {"loop-blocking-sleep", "loop-blocking-io", "loop-blocking-sync",
+            "loop-blocking-socket", "loop-heavy-handler",
+            "lockset-mixed", "lockset-counter",
+            "det-unordered-iter", "det-wallclock", "det-random"} <= covered
+
+
+@pytest.mark.parametrize("name", BAD_FIXTURES)
+def test_bad_fixture_exact_hits(name):
+    path = FIXTURES / name
+    expected = expected_hits(path)
+    assert expected, f"{name} has no EXPECT markers"
+    assert actual_hits(path) == expected
+
+
+@pytest.mark.parametrize("name", GOOD_FIXTURES)
+def test_good_fixture_clean(name):
+    assert analyze(str(FIXTURES / name)) == []
+
+
+def test_rule_filter_restricts_output():
+    path = FIXTURES / "det_bad.py"
+    only = analyze(str(path), rules=["det-wallclock"])
+    assert [f.rule for f in only] == ["det-wallclock"]
+
+
+def test_findings_carry_symbol_and_message():
+    (f,) = analyze(str(FIXTURES / "loop_sleep_bad.py"))
+    assert f.symbol == "PacedServer._tick"
+    assert "time.sleep" in f.message
+    assert f.path == "loop_sleep_bad.py"
+
+
+# ------------------------------------------------------------- suppressions
+def test_suppressions_silence_line_def_and_bare():
+    assert analyze(str(FIXTURES / "suppress_fixture.py")) == []
+
+
+def test_suppression_is_rule_scoped():
+    """A line-level ignore for one rule must not silence a different rule
+    on the same line."""
+    src = FIXTURES / "loop_sleep_bad.py"
+    text = src.read_text()
+    patched = text.replace(
+        "time.sleep(0.01)  # EXPECT: loop-blocking-sleep",
+        "time.sleep(0.01)  # lint: ignore[det-wallclock]",
+    )
+    assert patched != text
+    tmp = FIXTURES / "_tmp_scoped.py"
+    tmp.write_text(patched)
+    try:
+        assert {f.rule for f in analyze(str(tmp))} == {"loop-blocking-sleep"}
+    finally:
+        tmp.unlink()
+
+
+# ------------------------------------------------------------------ baseline
+def test_committed_baseline_matches_fresh_run():
+    """Self-check: a fresh analysis of src/ must be exactly covered by the
+    committed baseline — no new findings, no stale entries.  This is the
+    same invariant the CI gate enforces."""
+    findings = analyze(str(REPO / "src"))
+    baseline = bl.load(str(REPO / "tools" / "lint_baseline.json"))
+    new, stale = bl.apply(findings, baseline)
+    assert new == [] and stale == []
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({
+        "version": 1,
+        "entries": [{"rule": "lockset-mixed", "path": "x.py",
+                     "symbol": "C.m", "count": 1, "justification": "  "}],
+    }))
+    with pytest.raises(bl.BaselineError):
+        bl.load(str(p))
+
+
+def test_baseline_apply_counts_and_staleness(tmp_path):
+    findings = analyze(str(FIXTURES / "lockset_bad.py"))
+    assert len(findings) == 2
+    entries = [
+        {"rule": f.rule, "path": f.path, "symbol": f.symbol,
+         "count": 1, "justification": "fixture"}
+        for f in findings
+    ] + [{"rule": "det-random", "path": "gone.py", "symbol": "f",
+          "count": 1, "justification": "fixture"}]
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": bl.VERSION, "entries": entries}))
+    loaded = bl.load(str(p))
+    new, stale = bl.apply(findings, loaded)
+    assert new == []
+    assert [(e["rule"], e["path"]) for e in stale] == [("det-random", "gone.py")]
+    # A second hit on a count-1 entry is NEW, not absorbed.
+    new2, _ = bl.apply(list(findings) + [findings[0]], loaded)
+    assert [f.key() for f in new2] == [findings[0].key()]
+
+
+# ------------------------------------------------------------------- CLI
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.lint", *args],
+        capture_output=True, text=True, env=env, cwd=str(REPO),
+    )
+
+
+def test_cli_clean_target_exits_zero():
+    proc = _run_cli(str(FIXTURES / "loop_sleep_good.py"), "--baseline", "none")
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_cli_findings_exit_2_and_json_report(tmp_path):
+    report = tmp_path / "lint_report.json"
+    proc = _run_cli(str(FIXTURES / "det_bad.py"), "--baseline", "none",
+                    "--format", "json", "--report", str(report))
+    assert proc.returncode == 2
+    payload = json.loads(proc.stdout)
+    assert {f["rule"] for f in payload["findings"]} == {
+        "det-unordered-iter", "det-wallclock", "det-random"}
+    on_disk = json.loads(report.read_text())
+    assert on_disk["findings"] == payload["findings"]
+
+
+def test_cli_text_format_lists_path_line_rule():
+    proc = _run_cli(str(FIXTURES / "loop_sleep_bad.py"), "--baseline", "none")
+    assert proc.returncode == 2
+    assert re.search(r"loop_sleep_bad\.py:\d+: loop-blocking-sleep:",
+                     proc.stdout)
+
+
+def test_cli_bad_invocation_exits_3(tmp_path):
+    proc = _run_cli(str(tmp_path / "nope_does_not_exist"))
+    assert proc.returncode == 3
+
+
+def test_cli_write_baseline_roundtrip(tmp_path):
+    out = tmp_path / "baseline.json"
+    proc = _run_cli(str(FIXTURES / "lockset_bad.py"), "--baseline", "none",
+                    "--write-baseline", str(out))
+    assert proc.returncode == 0  # documented: write the skeleton and exit 0
+    skeleton = json.loads(out.read_text())
+    assert all("TODO" in e["justification"] for e in skeleton["entries"])
+    # Justify every entry, then re-run against the baseline: exit 0.
+    for e in skeleton["entries"]:
+        e["justification"] = "fixture: intentional"
+    out.write_text(json.dumps(skeleton))
+    proc2 = _run_cli(str(FIXTURES / "lockset_bad.py"), "--baseline", str(out))
+    assert proc2.returncode == 0, proc2.stderr + proc2.stdout
+
+
+def test_cli_gate_on_src_is_green():
+    """The exact CI gate invocation must pass on the committed tree."""
+    proc = _run_cli("src/")
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+
+
+# ------------------------------------------------------- runtime sanitizer
+class _Owner:
+    def __init__(self, thread):
+        self._loop_thread = thread
+
+
+def test_sanitizer_loop_assert_passes_on_loop_thread():
+    err = []
+
+    def body():
+        try:
+            san.assert_loop_thread(_Owner(threading.current_thread()))
+        except Exception as e:  # pragma: no cover - fails the assert below
+            err.append(e)
+
+    t = threading.Thread(target=body)
+    t.start()
+    t.join()
+    assert err == []
+
+
+def test_sanitizer_loop_assert_raises_off_thread():
+    t = threading.Thread(target=lambda: None)
+    t.start()
+    t.join()
+    with pytest.raises(san.ThreadOwnershipError, match="loop-owned"):
+        san.assert_loop_thread(_Owner(t))
+
+
+def test_sanitizer_worker_assert_raises_on_loop_thread():
+    with pytest.raises(san.ThreadOwnershipError, match="event-loop thread"):
+        san.assert_worker_thread(_Owner(threading.current_thread()))
+    # ... and passes for any other thread's owner.
+    t = threading.Thread(target=lambda: None)
+    t.start()
+    t.join()
+    san.assert_worker_thread(_Owner(t))
+
+
+def test_sanitizer_noops_before_loop_starts():
+    san.assert_loop_thread(_Owner(None))
+    san.assert_worker_thread(_Owner(None))
+
+
+def test_sanitizer_enabled_in_suite():
+    """conftest.py exports REPRO_SANITIZE=1 before any repro import, so the
+    whole suite runs with ownership checks armed."""
+    assert os.environ.get("REPRO_SANITIZE") == "1"
+    assert san.ENABLED
+
+
+def test_sanitizer_enable_disable_toggle():
+    orig = san.ENABLED
+    try:
+        san.disable()
+        assert not san.ENABLED
+        san.enable()
+        assert san.ENABLED
+    finally:
+        (san.enable if orig else san.disable)()

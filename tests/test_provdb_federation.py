@@ -105,14 +105,16 @@ def test_append_resume_keeps_prior_records(tmp_path):
     db2.ingest(_result_for(frame, anomaly_fid=1), frame.comm_events)
     db2.close()
 
-    lines = [json.loads(l) for l in open(path)]
+    with open(path) as f:
+        lines = [json.loads(l) for l in f]
     assert [d["type"] for d in lines] == ["run_info", "anomaly", "anomaly"]
     assert len(db2) == 2
 
     # Default (no append) still starts a fresh store.
     db3 = ProvenanceDB(path=path, run_info=FIXED_RUN_INFO)
     db3.close()
-    lines = [json.loads(l) for l in open(path)]
+    with open(path) as f:
+        lines = [json.loads(l) for l in f]
     assert [d["type"] for d in lines] == ["run_info"]
 
 
@@ -221,7 +223,8 @@ def test_federated_matches_single_store(tmp_path, num_shards):
     else:
         assert sum(fed.shard_doc_counts()) == len(single)
         for s, p in enumerate(shard_paths(str(tmp_path / "fed.jsonl"), num_shards)):
-            docs = [json.loads(l) for l in open(p)][1:]
+            with open(p) as f:
+                docs = [json.loads(l) for l in f][1:]
             assert all(
                 shard_of(d["rank"], d["anomaly"]["fid"], num_shards) == s
                 for d in docs
@@ -270,7 +273,8 @@ def test_socket_provdb_matches_local(tmp_path, num_shards):
             shard_paths(str(tmp_path / "local.jsonl"), num_shards),
             shard_paths(str(tmp_path / "sock.jsonl"), num_shards),
         ):
-            assert open(pl, "rb").read() == open(ps_, "rb").read()
+            with open(pl, "rb") as fl, open(ps_, "rb") as fs:
+                assert fl.read() == fs.read()
 
 
 def test_socket_provdb_resume_across_transports(tmp_path):
@@ -456,7 +460,8 @@ def test_mid_batch_kill_no_dropped_no_duplicated_docs(tmp_path):
         seqs = [seq for seq, _ in shard.dump()]
         assert seqs == list(range(20))
         shard.flush()
-        lines = [json.loads(l) for l in open(path)]
+        with open(path) as f:
+            lines = [json.loads(l) for l in f]
         assert [d["seq"] for d in lines] == list(range(20))
         shard.close()
     finally:

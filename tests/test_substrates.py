@@ -114,7 +114,8 @@ def test_monitor_end_to_end(tmp_path):
     fv = viz.function_view(key[0], key[1], x="entry", y="runtime")
     assert fv["points"] or not len(mon.kept[key])
     viz.dump(str(tmp_path / "viz.json"))
-    assert json.load(open(tmp_path / "viz.json"))["summary"]["frames"] == 240
+    with open(tmp_path / "viz.json") as fh:
+        assert json.load(fh)["summary"]["frames"] == 240
     mon.close()
 
 

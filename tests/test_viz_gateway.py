@@ -851,6 +851,7 @@ def test_replay_cli_subprocess(tmp_path):
     finally:
         proc.terminate()
         proc.wait(timeout=10)
+        proc.stdout.close()
 
 
 def test_monitor_viz_serve_wiring(tmp_path):
