@@ -22,10 +22,17 @@ denominator — pass ``--baseline`` to point at a different trajectory file.
 Measured per configuration: throughput (updates/s, docs/s, queries/s) AND
 p50/p95 per-call latency (one ``update_and_fetch`` / one ``ingest``) —
 throughput alone hides head-of-line blocking, which is exactly what the
-async path removes.  Every configuration must converge to the same global
-stats (PS, to float associativity under thread interleaving) and to
-identical docs in identical order (provenance, exactly — the federation
-invariant).
+async path removes.  Since PR 8 the percentiles come from the
+``repro.telemetry`` histograms the hot paths already populate
+(``repro_ps_update_us`` / ``repro_prov_ingest_us``) rather than a
+client-side timing list — same call sites, but bucket-derived and
+therefore identical to what ``/metrics`` reports; the raw list remains
+as the ``REPRO_TELEMETRY=0`` fallback.  A ``ps_telemetry_overhead`` row
+A/Bs the instrumented PS update path against ``set_enabled(False)``
+(full runs gate it at ≤5%).  Every configuration must converge to the
+same global stats (PS, to float associativity under thread interleaving)
+and to identical docs in identical order (provenance, exactly — the
+federation invariant).
 
     PYTHONPATH=src python benchmarks/bench_net_federation.py [--smoke] \
         [--json BENCH_net.json]
@@ -56,6 +63,7 @@ from repro.core.ps import FederatedPS
 from repro.core.sim import WorkloadGenerator, nwchem_like
 from repro.core.stats import StatsTable
 from repro.launch.shard_server import ShardServerPool
+from repro.telemetry import registry as telemetry
 
 # Fixed run_info: every store in one comparison writes identical headers.
 RUN_INFO = {"timestamp": 0.0}
@@ -82,6 +90,26 @@ def _pctl(lat_us: List[float]) -> Dict[str, float]:
         "p50_us": float(np.percentile(xs, 50)) if xs.size else 0.0,
         "p95_us": float(np.percentile(xs, 95)) if xs.size else 0.0,
     }
+
+
+def _hist_pctl(metric: str, transport: str, fallback: List[float]) -> Dict:
+    """p50/p95 from the process-wide telemetry histogram.
+
+    Same call sites the client-side timing list covered, but derived from
+    the fixed log2 buckets -- i.e. exactly the numbers ``/metrics``
+    exposes.  Requires a per-repeat ``registry.reset()`` so the window is
+    one repeat, not the whole bench.  Falls back to the raw timing list
+    when telemetry is disabled (``REPRO_TELEMETRY=0``)."""
+    fam = telemetry.get_registry().get(metric)
+    if telemetry.ENABLED and fam is not None:
+        h = fam.labels(transport=transport)
+        if h.count:
+            return {
+                "p50_us": h.percentile(50),
+                "p95_us": h.percentile(95),
+                "latency_source": "telemetry",
+            }
+    return {**_pctl(fallback), "latency_source": "client"}
 
 
 # ------------------------------------------------------------------------- PS
@@ -152,9 +180,12 @@ def run_ps(
             # Best-of-N: the workload is deterministic, so run-to-run spread
             # is scheduler noise — the fastest repeat is the least-noisy
             # estimate for *every* transport (baseline included).
-            best: Optional[Tuple[float, List[float]]] = None
+            best: Optional[Tuple[float, Dict]] = None
             for _rep in range(max(repeats, 1)):
                 pool = None
+                # One repeat = one histogram window (children keep identity,
+                # so FederatedPS's cached child survives the reset).
+                telemetry.get_registry().reset()
                 try:
                     if is_socket:
                         pool = ShardServerPool(S, kind="ps")
@@ -175,6 +206,7 @@ def run_ps(
                 finally:
                     if pool is not None:
                         pool.stop()
+                pct = _hist_pctl("repro_ps_update_us", transport, lat)
                 if reference is None:
                     reference = snap
                 else:
@@ -183,8 +215,8 @@ def run_ps(
                     # reorders merges).
                     assert np.allclose(reference, snap, rtol=1e-6, atol=1e-6)
                 if best is None or dt < best[0]:
-                    best = (dt, lat)
-            dt, lat = best
+                    best = (dt, pct)
+            dt, pct = best
             rows.append(
                 {
                     "config": f"ps_S{S}_{transport}",
@@ -194,7 +226,7 @@ def run_ps(
                     "time_s": dt,
                     "total_updates": total_updates,
                     "updates_per_s": total_updates / dt,
-                    **_pctl(lat),
+                    **pct,
                 }
             )
     return rows
@@ -240,6 +272,7 @@ def run_prov(
                 best = None  # best-of-N: see run_ps
                 for rep in range(max(repeats, 1)):
                     pool = None
+                    telemetry.get_registry().reset()  # per-repeat window
                     try:
                         kw = dict(
                             path=os.path.join(td, f"prov_S{S}_{transport}_{rep}.jsonl"),
@@ -286,9 +319,10 @@ def run_prov(
                     finally:
                         if pool is not None:
                             pool.stop()
+                    pct = _hist_pctl("repro_prov_ingest_us", transport, lat)
                     if best is None or dt_ingest < best[0]:
-                        best = (dt_ingest, lat, dt_query, docs)
-                dt_ingest, lat, dt_query, docs = best
+                        best = (dt_ingest, pct, dt_query, docs)
+                dt_ingest, pct, dt_query, docs = best
                 rows.append(
                     {
                         "config": f"prov_S{S}_{transport}",
@@ -301,10 +335,55 @@ def run_prov(
                         "docs_per_s": len(docs) / dt_ingest,
                         "query_s": dt_query,
                         "queries_per_s": n_queries / dt_query,
-                        **_pctl(lat),
+                        **pct,
                     }
                 )
     return rows
+
+
+# ------------------------------------------------------------------- overhead
+def run_overhead(
+    n_ranks: int = 8,
+    frames: int = 40,
+    num_funcs: int = 4096,
+    working_set: int = 512,
+    repeats: int = 3,
+) -> Dict:
+    """A/B the instrumentation cost on the PS update hot path.
+
+    Local transport, S=1: every ``update_and_fetch`` runs in-process, so
+    the enabled-vs-disabled delta is pure instrumentation (no RPC noise to
+    hide behind).  Best-of-N per mode on identical deltas; the acceptance
+    gate (full runs) is ≤5% overhead."""
+    deltas = _make_deltas(n_ranks, frames, num_funcs, working_set)
+    prev = telemetry.ENABLED
+    times: Dict[str, float] = {}
+    try:
+        for mode, on in (("on", True), ("off", False)):
+            telemetry.set_enabled(on)
+            best: Optional[float] = None
+            for _rep in range(max(repeats, 1)):
+                telemetry.get_registry().reset()
+                fed = FederatedPS(num_funcs, num_shards=1)
+                dt, _ = _drive(fed, deltas)
+                t0 = time.perf_counter()
+                fed.drain()
+                dt += time.perf_counter() - t0
+                fed.close()
+                best = dt if best is None else min(best, dt)
+            times[mode] = best
+    finally:
+        telemetry.set_enabled(prev)
+    overhead_pct = (times["on"] / times["off"] - 1.0) * 100.0
+    return {
+        "config": "ps_telemetry_overhead",
+        "section": "overhead",
+        "transport": "local",
+        "time_telemetry_on_s": times["on"],
+        "time_telemetry_off_s": times["off"],
+        "total_updates": n_ranks * frames,
+        "overhead_pct": overhead_pct,
+    }
 
 
 def _curve(rows: List[Dict], section: str, transport: str, metric: str) -> Dict[int, float]:
@@ -377,10 +456,14 @@ def main(argv=()):
         prov_rows = run_prov(
             shard_counts=(1, 2), n_ranks=4, steps=12, n_queries=40, repeats=1
         )
+        overhead_row = run_overhead(
+            n_ranks=4, frames=10, num_funcs=1024, working_set=128, repeats=1
+        )
     else:
         ps_rows = run_ps()
         prov_rows = run_prov()
-    rows = ps_rows + prov_rows
+        overhead_row = run_overhead()
+    rows = ps_rows + prov_rows + [overhead_row]
     for r in ps_rows:
         print(
             f"net_federation/{r['config']},{r['time_s'] * 1e6 / r['total_updates']:.2f},"
@@ -394,6 +477,12 @@ def main(argv=()):
             f"queries_per_s={r['queries_per_s']:.0f};"
             f"p50_us={r['p50_us']:.1f};p95_us={r['p95_us']:.1f}"
         )
+    print(
+        f"net_federation/ps_telemetry_overhead,,"
+        f"overhead_pct={overhead_row['overhead_pct']:.2f};"
+        f"on_s={overhead_row['time_telemetry_on_s']:.3f};"
+        f"off_s={overhead_row['time_telemetry_off_s']:.3f}"
+    )
     speedups = {}
     for section, metric in (("ps", "updates_per_s"), ("prov", "docs_per_s")):
         local = _scaling(rows, section, "local", metric)
@@ -428,6 +517,15 @@ def main(argv=()):
         else:
             ok = all(speedups[sec][S] >= 2.0 for sec, S in required)
             print(f"net_federation/acceptance_evloop_2x_threaded,,{'PASS' if ok else 'FAIL'}")
+        # Telemetry must stay invisible on the hot path: ≤5% on the PS
+        # update path vs REPRO_TELEMETRY=0.  Gated on full runs only —
+        # smoke-scale runs record the row but are too noisy to gate.
+        tel_ok = overhead_row["overhead_pct"] <= 5.0
+        print(
+            "net_federation/acceptance_telemetry_overhead_5pct,,"
+            f"{'PASS' if tel_ok else 'FAIL'}"
+        )
+        ok = ok and tel_ok
     if args.json:
         doc = {
             "bench": "net_federation",

@@ -13,7 +13,12 @@ over real sockets:
     ``python -m repro.export`` render (the PR acceptance invariant);
   * WebSocket fan-out — V viewers all receiving an M-message broadcast
     sequence, aggregate delivered messages/second, asserting every viewer
-    got the identical sequence.
+    got the identical sequence;
+  * ``/metrics`` under load — a scraper thread GETs the Prometheus
+    exposition *while* the WS broadcast storm runs, parsing every reply
+    with the strict stdlib validator; the smoke run doubles as the CI
+    assertion that self-observability keeps serving when the gateway is
+    busiest.
 
     PYTHONPATH=src python benchmarks/bench_viz_gateway.py [--smoke]
 """
@@ -32,6 +37,7 @@ from typing import Dict, List
 
 from repro.core.sim import WorkloadGenerator, nwchem_like
 from repro.export.record_stream import export_stream
+from repro.telemetry.exposition import parse_exposition
 from repro.trace.monitor import ChimbukoMonitor
 from repro.viz import ws as W
 from repro.viz.gateway import VizGateway
@@ -101,8 +107,23 @@ def _ws_viewer(endpoint, n_msgs: int, out: List[bytes]):
     out.extend(m.data for m in msgs[1:])
 
 
+def _scrape_metrics(endpoint, n: int, out: Dict) -> None:
+    """GET + strictly parse /metrics ``n`` times; runs concurrently with
+    the WS broadcast storm so the exposition path is measured under load."""
+    t0 = time.perf_counter()
+    families = 0
+    for _ in range(n):
+        body = _http_get(endpoint, "/metrics")
+        fams = parse_exposition(body.decode("utf-8"))
+        assert "repro_ws_broadcasts_total" in fams, sorted(fams)[:8]
+        families = len(fams)
+    out["n"] = n
+    out["dt"] = time.perf_counter() - t0
+    out["families"] = families
+
+
 def run(n_ranks: int, steps: int, n_http: int, n_viewers: int,
-        n_broadcast: int) -> List[Dict]:
+        n_broadcast: int, n_metrics: int) -> List[Dict]:
     rows = []
     with tempfile.TemporaryDirectory() as td:
         monitor = _build_run(td, n_ranks, steps)
@@ -146,12 +167,25 @@ def run(n_ranks: int, steps: int, n_http: int, n_viewers: int,
             while gw.n_viewers < n_viewers:
                 assert time.time() < deadline, "viewers never connected"
                 time.sleep(0.005)
+            scrape: Dict = {}
+            scraper = threading.Thread(
+                target=_scrape_metrics, args=(gw.endpoint, n_metrics, scrape)
+            )
+            scraper.start()
             t0 = time.perf_counter()
             for i in range(n_broadcast):
                 gw.publish_frame(i % n_ranks, i, i % 3, severity=i % 7)
             for t in threads:
                 t.join(timeout=60)
             dt = time.perf_counter() - t0
+            scraper.join(timeout=60)
+            assert scrape.get("n") == n_metrics, "/metrics stalled under load"
+            rows.append({
+                "config": "metrics_under_ws_load",
+                "us": scrape["dt"] * 1e6 / n_metrics,
+                "derived": f"scrapes_per_s={n_metrics / scrape['dt']:.0f};"
+                f"families={scrape['families']};exposition_valid=1",
+            })
             ref = sinks[0]
             assert len(ref) == n_broadcast
             assert all(sk == ref for sk in sinks), "viewer sequences diverged"
@@ -179,15 +213,18 @@ def main(argv=()):
     )
     args = ap.parse_args(list(argv))
     if args.smoke:
-        rows = run(n_ranks=2, steps=6, n_http=20, n_viewers=4, n_broadcast=50)
+        rows = run(n_ranks=2, steps=6, n_http=20, n_viewers=4, n_broadcast=50,
+                   n_metrics=10)
     else:
         rows = run(n_ranks=8, steps=30, n_http=200, n_viewers=16,
-                   n_broadcast=500)
+                   n_broadcast=500, n_metrics=50)
     for r in rows:
         print(f"viz_gateway/{r['config']},{r['us']:.2f},{r['derived']}")
-    # Acceptance: /trace byte-equality and identical viewer sequences are
-    # asserted in run(); reaching here means both held.
+    # Acceptance: /trace byte-equality, identical viewer sequences, and
+    # /metrics serving valid exposition during the broadcast storm are all
+    # asserted in run(); reaching here means they held.
     print("viz_gateway/acceptance_serving_equivalence,,PASS")
+    print("viz_gateway/acceptance_metrics_under_load,,PASS")
 
 
 if __name__ == "__main__":

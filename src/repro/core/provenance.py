@@ -49,6 +49,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from ..telemetry import registry as telemetry
 from .ad import ADFrameResult
 from .events import FunctionRegistry
 
@@ -555,6 +556,11 @@ class FederatedProvenanceDB:
         # ProvenanceDB.last_ingest) — identical across shard counts and
         # transports because the front-end assigns seqs and builds docs.
         self.last_ingest: List[Tuple[int, int]] = []
+        self._m_ingest = telemetry.get_registry().histogram(
+            "repro_prov_ingest_us",
+            "FederatedProvenanceDB.ingest latency in microseconds.",
+            ["transport"],
+        ).labels(transport=transport)
         header = {"type": "run_info", **static_provenance(run_info)} if path else None
         owned = shard_paths(path, num_shards)
         if transport == "socket":
@@ -628,6 +634,7 @@ class FederatedProvenanceDB:
         order is preserved by the connection, so every later read observes
         the batch).
         """
+        t0_ns = time.perf_counter_ns() if telemetry.ENABLED else 0
         batches: Dict[int, Tuple[List[Dict[str, Any]], List[int]]] = {}
         n = 0
         self.last_ingest = []
@@ -650,6 +657,8 @@ class FederatedProvenanceDB:
                 for doc, seq in zip(docs, seqs):
                     shard.add(doc, seq)
                 shard.flush()
+        if t0_ns:
+            self._m_ingest.observe((time.perf_counter_ns() - t0_ns) // 1000)
         return n
 
     # -------------------------------------------------------------- queries

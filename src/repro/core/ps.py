@@ -47,6 +47,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..telemetry import registry as telemetry
 from .stats import (
     N,
     StatsTable,
@@ -325,6 +326,14 @@ class FederatedPS(AnomalyFeed):
         self.n_updates = 0
         self._agg_at = 0  # n_updates value the cached aggregate reflects
         self._agg = empty_table(num_funcs)  # cached global snapshot (COW ref)
+        # The PS update path is the overhead-gated hot path: the bench
+        # sources its p50/p95 from this histogram and asserts instrumented
+        # vs REPRO_TELEMETRY=0 cost stays within budget.
+        self._m_update = telemetry.get_registry().histogram(
+            "repro_ps_update_us",
+            "FederatedPS.update_and_fetch latency in microseconds.",
+            ["transport"],
+        ).labels(transport=transport)
 
     # --------------------------------------------------------------- sizing
     @property
@@ -346,6 +355,7 @@ class FederatedPS(AnomalyFeed):
         self, rank: int, step: int, delta: np.ndarray
     ) -> Optional[np.ndarray]:
         """Route a delta's rows to their shards; return the cached aggregate."""
+        t0_ns = time.perf_counter_ns() if telemetry.ENABLED else 0
         self._ensure_capacity(delta.shape[0])
         S = self.num_shards
         # One O(F) pass finds the non-empty rows (n > 0); the shards those
@@ -392,6 +402,8 @@ class FederatedPS(AnomalyFeed):
         # rebuilds used to heal that; delta refreshes never would).
         out = pad_table(self._agg, self._num_funcs).view()
         out.flags.writeable = False
+        if t0_ns:
+            self._m_update.observe((time.perf_counter_ns() - t0_ns) // 1000)
         return out
 
     # ---------------------------------------------------------- aggregation

@@ -165,6 +165,27 @@ class ChromeTraceWriter:
         self._emit({"ph": "C", "pid": pid, "tid": 0, "name": name,
                     "ts": int(ts), "args": {k: int(v) for k, v in values.items()}})
 
+    def complete(self, pid: int, tid: int, name: str, ts: int, dur: int,
+                 args: Optional[Dict[str, Any]] = None,
+                 cat: Optional[str] = None) -> None:
+        """Complete event (``ph: "X"``): a span with explicit duration.
+
+        Used for spans whose begin/end arrive together — e.g. the
+        telemetry self-trace (the analyzer's own RPC dispatch / heavy
+        offload / frame ingest regions), which lands in its own process
+        group next to the workload tracks.  Both timestamps come from the
+        caller, so this stays inside the module's determinism contract.
+        """
+        self._ensure_thread(pid, tid)
+        evt: Dict[str, Any] = {"ph": "X", "pid": pid, "tid": tid,
+                               "name": name, "ts": int(ts),
+                               "dur": max(int(dur), 0)}
+        if args:
+            evt["args"] = args
+        if cat is not None:
+            evt["cat"] = cat
+        self._emit(evt)
+
     # Flow events (ph "s"/"f"): Perfetto draws an arrow from the start to
     # the finish — how a SEND on one rank points at its RECV on another.
     def flow_start(self, pid: int, tid: int, name: str, ts: int, flow_id: int,
@@ -331,7 +352,8 @@ def validate_trace(source: Union[str, IO[str], Dict[str, Any]]) -> Dict[str, int
     flow_s: Dict[Tuple[str, int], int] = {}
     flow_f: Dict[Tuple[str, int], int] = {}
     counts = {"events": len(events), "durations": 0, "instants": 0,
-              "counters": 0, "async": 0, "metadata": 0, "flows": 0}
+              "counters": 0, "async": 0, "metadata": 0, "flows": 0,
+              "completes": 0}
     for k, e in enumerate(events):
         ph = e.get("ph")
         key = (e.get("pid"), e.get("tid"))
@@ -396,6 +418,12 @@ def validate_trace(source: Union[str, IO[str], Dict[str, Any]]) -> Dict[str, int
             ):
                 raise ValueError(f"event {k}: counter args must be numeric")
             counts["counters"] += 1
+        elif ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                raise ValueError(f"event {k}: complete event dur must be a"
+                                 f" non-negative integer, got {dur!r}")
+            counts["completes"] += 1
         else:
             raise ValueError(f"event {k}: unknown phase {ph!r}")
     unbalanced = {k: v for k, v in stacks.items() if v}

@@ -109,9 +109,18 @@ def train(
             viz_serve=viz_port,
         )
         if monitor.viz_gateway is not None:
+            # One consolidated banner with the *full* endpoint set — viz,
+            # metrics, and every shard process — printed after endpoint
+            # resolution, so operators can point scrapers at each process.
             host, port = monitor.viz_gateway.endpoint
-            print(f"[viz] gateway serving http://{host}:{port}/ "
-                  f"(ws://{host}:{port}/ws)", flush=True)
+            banner = [
+                f"[endpoints] viz      http://{host}:{port}/ "
+                f"(ws://{host}:{port}/ws)",
+                f"[endpoints] metrics  http://{host}:{port}/metrics",
+            ]
+            for i, (sh, sp) in enumerate(endpoints or ()):
+                banner.append(f"[endpoints] shard{i}   {sh}:{sp} (metrics.snapshot)")
+            print("\n".join(banner), flush=True)
         monitor.on_straggler(
             lambda ev: print(f"[monitor] straggler: step={ev.step} z={ev.zscore:.1f}")
         )

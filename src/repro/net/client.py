@@ -42,6 +42,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..telemetry import registry as telemetry
 from .framing import (
     ERROR,
     METHOD_RESOLVE,
@@ -131,8 +132,42 @@ class RPCClient:
         self._sendbuf = bytearray()
         self.sendbuf_max = 256 << 10
         self._closed = False
+        # Client-side telemetry, labeled by endpoint: per-method call
+        # latency (request append → future resolution), reconnect count,
+        # and send-buffer occupancy for the buffered fire-and-forget path.
+        _ep = f"{self.endpoint[0]}:{self.endpoint[1]}"
+        _reg = telemetry.get_registry()
+        self._m_latency_family = _reg.histogram(
+            "repro_client_call_latency_us",
+            "Client-observed call latency in microseconds (send to resolve;"
+            " buffered calls include their coalescing delay).",
+            ["endpoint", "method"],
+        )
+        self._m_reconnects = _reg.counter(
+            "repro_client_reconnects_total",
+            "Connections re-dialed after the initial connect.",
+            ["endpoint"],
+        ).labels(endpoint=_ep)
+        self._m_sendbuf = _reg.gauge(
+            "repro_client_sendbuf_bytes",
+            "Bytes of buffered fire-and-forget frames awaiting a flush.",
+            ["endpoint"],
+        ).labels(endpoint=_ep)
+        self._telemetry_endpoint = _ep
+        self._m_by_method: Dict[str, object] = {}
         with self._lock:
             self._connect()
+
+    def _method_latency(self, name: str):
+        m = self._m_by_method.get(name)
+        if m is None:
+            m = self._m_by_method.setdefault(
+                name,
+                self._m_latency_family.labels(
+                    endpoint=self._telemetry_endpoint, method=name
+                ),
+            )
+        return m
 
     # ------------------------------------------------------------ connection
     def _connect(self) -> None:  # lint: ignore[lockset-mixed] — caller holds _lock
@@ -176,6 +211,8 @@ class RPCClient:
             str(k): int(v) for k, v in frames[0].env.get("methods", {}).items()
         }
         self._gen += 1
+        if self._gen > 1:
+            self._m_reconnects.inc()
         self._sock = sock
         # Frames buffered for the dead connection died with it (their
         # futures were failed by generation); never replay them here.
@@ -207,6 +244,12 @@ class RPCClient:
             self._next_rid = rid % 0xFFFFFFFF + 1
             self._pending[rid] = (self._gen, name, fut)
         frame = encode_frame(method_id, REQUEST, rid, env, arrays)
+        if telemetry.ENABLED:
+            latency = self._method_latency(name)
+            t0_ns = time.perf_counter_ns()
+            fut.add_done_callback(
+                lambda _f: latency.observe((time.perf_counter_ns() - t0_ns) // 1000)
+            )
         try:
             assert self._sock is not None
             if buffered:
@@ -216,6 +259,8 @@ class RPCClient:
                 self._sendbuf += frame
                 if len(self._sendbuf) >= self.sendbuf_max:
                     self._flush_sends_locked()
+                elif telemetry.ENABLED:
+                    self._m_sendbuf.set(len(self._sendbuf))
             else:
                 if self._sendbuf:
                     self._flush_sends_locked()
@@ -233,6 +278,8 @@ class RPCClient:
 
     def _flush_sends_locked(self) -> None:  # lint: ignore[lockset-mixed] — caller holds _lock
         buf, self._sendbuf = self._sendbuf, bytearray()
+        if telemetry.ENABLED:
+            self._m_sendbuf.set(0)
         self._sock.sendall(buf)
 
     def flush_sends(self) -> None:

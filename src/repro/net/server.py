@@ -48,9 +48,12 @@ import queue
 import selectors
 import socket
 import threading
+import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from ..lint import runtime as san
+from ..telemetry import registry as telemetry
+from ..telemetry.selftrace import get_self_tracer
 from .framing import (
     ERROR,
     METHOD_RESOLVE,
@@ -219,18 +222,57 @@ class EventLoopServer:
         self._wake_w.setblocking(False)
         self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
         self._conns: Dict[int, EventLoopConn] = {}
-        self._posted: Deque[Callable[[], None]] = collections.deque()
+        # Posted callables carry their schedule timestamp so the loop can
+        # observe its own lag (scheduled-vs-actual wakeup delta).
+        self._posted: Deque[Tuple[Callable[[], None], int]] = collections.deque()
         self._jobs: "queue.SimpleQueue" = queue.SimpleQueue()
         self._worker_threads: List[threading.Thread] = []
         self._loop_thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
-        # Public observability counters: incremented on the loop thread,
-        # polled cross-thread (tests, benches, the future autoscaler), so
-        # updates take _stats_lock — a bare += is a read-modify-write that
-        # can drop counts under contention (repro.lint: lockset-counter).
-        self._stats_lock = threading.Lock()
-        self.backpressure_pauses = 0  # observability: slow-reader pauses taken
-        self.backpressure_resumes = 0  # ... and drains back under low water
+        # Observability: every counter lives in the telemetry registry
+        # (internally locked, exact under contention, snapshot-mergeable
+        # across shards) instead of ad-hoc _stats_lock fields.  The public
+        # backpressure_pauses/resumes names survive as read properties.
+        self._telemetry_server = f"{type(self).__name__}:{self._port}"
+        _reg = telemetry.get_registry()
+        _srv = self._telemetry_server
+        self._m_backpressure_pauses = _reg.counter(
+            "repro_backpressure_pauses_total",
+            "Slow-reader connections paused at the outbound high watermark.",
+            ["server"],
+        ).labels(server=_srv)
+        self._m_backpressure_resumes = _reg.counter(
+            "repro_backpressure_resumes_total",
+            "Paused connections drained back under the low watermark.",
+            ["server"],
+        ).labels(server=_srv)
+        self._m_loop_lag = _reg.histogram(
+            "repro_loop_lag_us",
+            "Event-loop lag: delta between a callable's _post() and its run.",
+            ["server"],
+        ).labels(server=_srv)
+        self._m_queue_depth = _reg.gauge(
+            "repro_worker_queue_depth",
+            "Jobs queued for the worker pool (heavy handlers, offloads).",
+            ["server"],
+        ).labels(server=_srv)
+        self._m_connections = _reg.gauge(
+            "repro_connections",
+            "Open connections owned by the event loop.",
+            ["server"],
+        ).labels(server=_srv)
+        self._selftrace = get_self_tracer()
+
+    # ----------------------------------------------------- observability
+    @property
+    def backpressure_pauses(self) -> int:
+        """Slow-reader pauses taken (0 when REPRO_TELEMETRY=0)."""
+        return self._m_backpressure_pauses.value
+
+    @property
+    def backpressure_resumes(self) -> int:
+        """Pauses drained back under low water (0 when REPRO_TELEMETRY=0)."""
+        return self._m_backpressure_resumes.value
 
     # --------------------------------------------------------- protocol hooks
     def _make_conn(self, sock: socket.socket) -> EventLoopConn:
@@ -310,7 +352,7 @@ class EventLoopServer:
     # --------------------------------------------------------- thread bridges
     def _post(self, fn: Callable[[], None]) -> None:
         """Schedule ``fn`` to run on the loop thread (thread-safe)."""
-        self._posted.append(fn)
+        self._posted.append((fn, time.perf_counter_ns()))
         self._wake()
 
     def _offload(self, fn: Callable[[], None]) -> None:
@@ -325,10 +367,14 @@ class EventLoopServer:
             t.start()
             self._worker_threads.append(t)
         self._jobs.put(fn)
+        if telemetry.ENABLED:
+            self._m_queue_depth.set(self._jobs.qsize())
 
     def _worker_main(self) -> None:
         while True:
             job = self._jobs.get()
+            if telemetry.ENABLED:
+                self._m_queue_depth.set(self._jobs.qsize())
             if job is None:
                 return
             try:
@@ -352,7 +398,12 @@ class EventLoopServer:
                     else:
                         self._service(key.data, _mask)
                 while self._posted:
-                    self._posted.popleft()()
+                    fn, scheduled_ns = self._posted.popleft()
+                    if telemetry.ENABLED:
+                        self._m_loop_lag.observe(
+                            (time.perf_counter_ns() - scheduled_ns) // 1000
+                        )
+                    fn()
         finally:
             for conn in list(self._conns.values()):
                 self._close_conn(conn)
@@ -379,6 +430,8 @@ class EventLoopServer:
             conn = self._make_conn(sock)
             self._conns[conn.fd] = conn
             self._sel.register(sock, selectors.EVENT_READ, conn)
+            if telemetry.ENABLED:
+                self._m_connections.set(len(self._conns))
 
     def _service(self, conn: EventLoopConn, mask: int) -> None:
         if san.ENABLED:
@@ -460,12 +513,10 @@ class EventLoopServer:
             return
         if not conn.paused and conn.out_bytes > self._high_water:
             conn.paused = True
-            with self._stats_lock:
-                self.backpressure_pauses += 1
+            self._m_backpressure_pauses.inc()
         elif conn.paused and conn.out_bytes <= self._low_water:
             conn.paused = False
-            with self._stats_lock:
-                self.backpressure_resumes += 1
+            self._m_backpressure_resumes.inc()
         events = selectors.EVENT_WRITE if conn.outq else 0
         # Inbound backpressure: the protocol may additionally gate reads
         # (e.g. requests buffered behind an in-flight heavy handler).
@@ -493,6 +544,8 @@ class EventLoopServer:
             return
         conn.closed = True
         self._conns.pop(conn.fd, None)
+        if telemetry.ENABLED:
+            self._m_connections.set(len(self._conns))
         try:
             self._sel.unregister(conn.sock)
         except (KeyError, ValueError, OSError):
@@ -540,6 +593,50 @@ class RPCServer(EventLoopServer):
                          high_water=high_water, low_water=low_water)
         self.table = table
         self._pending_max = max(int(pending_max), 1)
+        _reg = telemetry.get_registry()
+        self._rpc_requests = _reg.counter(
+            "repro_rpc_requests_total",
+            "RPC requests executed, by server instance and method.",
+            ["server", "method"],
+        )
+        self._rpc_latency = _reg.histogram(
+            "repro_rpc_latency_us",
+            "Server-side handler latency in microseconds, by method.",
+            ["server", "method"],
+        )
+        self._rpc_reply_bytes = _reg.histogram(
+            "repro_rpc_reply_bytes",
+            "Encoded reply frame size in bytes, by method.",
+            ["server", "method"],
+        )
+        self._m_heavy_inflight = _reg.gauge(
+            "repro_rpc_heavy_inflight",
+            "Heavy handlers currently running on the worker pool.",
+            ["server"],
+        ).labels(server=self._telemetry_server)
+        # Per-method child cache: labels() costs a canonical-key encode, so
+        # the hot path resolves each method's children once.  dict reads and
+        # setdefault are GIL-atomic; labels() dedupes children, so racing
+        # threads converge on the same objects.
+        self._m_by_method: Dict[str, tuple] = {}
+
+    def _method_metrics(self, name: str) -> tuple:
+        m = self._m_by_method.get(name)
+        if m is None:
+            srv = self._telemetry_server
+            m = self._m_by_method.setdefault(name, (
+                self._rpc_requests.labels(server=srv, method=name),
+                self._rpc_latency.labels(server=srv, method=name),
+                self._rpc_reply_bytes.labels(server=srv, method=name),
+            ))
+        return m
+
+    def _observe_rpc(self, name: str, t0_ns: int, reply: Optional[bytes]) -> None:
+        requests, latency, reply_bytes = self._method_metrics(name)
+        requests.inc()
+        latency.observe((time.perf_counter_ns() - t0_ns) // 1000)
+        if reply is not None:
+            reply_bytes.observe(len(reply))
 
     # --------------------------------------------------------- protocol hooks
     def _make_conn(self, sock: socket.socket) -> _RPCConn:
@@ -576,11 +673,22 @@ class RPCServer(EventLoopServer):
             name, fn, heavy = resolved
             if heavy:
                 conn.busy = True
+                self._m_heavy_inflight.inc()
                 self._offload(
                     lambda c=conn, n=name, f=fn, fr=frame: self._run_heavy(c, n, f, fr)
                 )
             else:
-                reply = _run_method(name, fn, frame)
+                if telemetry.ENABLED:
+                    t0 = time.perf_counter_ns()
+                    reply = _run_method(name, fn, frame)
+                    self._observe_rpc(name, t0, reply)
+                    if self._selftrace.enabled:
+                        self._selftrace.record(
+                            f"rpc:{name}", t0 // 1000,
+                            (time.perf_counter_ns() - t0) // 1000,
+                        )
+                else:
+                    reply = _run_method(name, fn, frame)
                 if reply is None:
                     self._close_conn(conn)  # unframeable reply: drop conn
                     return
@@ -595,13 +703,24 @@ class RPCServer(EventLoopServer):
         """Worker-side: execute, then post the completion back to the loop."""
         if san.ENABLED:
             san.assert_worker_thread(self)
-        reply = _run_method(name, fn, frame)
+        if telemetry.ENABLED:
+            t0 = time.perf_counter_ns()
+            reply = _run_method(name, fn, frame)
+            self._observe_rpc(name, t0, reply)
+            if self._selftrace.enabled:
+                self._selftrace.record(
+                    f"rpc.heavy:{name}", t0 // 1000,
+                    (time.perf_counter_ns() - t0) // 1000,
+                )
+        else:
+            reply = _run_method(name, fn, frame)
         self._post(lambda: self._complete_heavy(conn, reply))
 
     def _complete_heavy(self, conn: _RPCConn, reply: Optional[bytes]) -> None:
         if san.ENABLED:
             san.assert_loop_thread(self)
         conn.busy = False
+        self._m_heavy_inflight.dec()
         if conn.closed:
             return  # connection died while the handler ran
         if reply is None:

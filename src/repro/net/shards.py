@@ -247,6 +247,18 @@ class ProvenanceShardService:
         return {}, ()
 
 
+def _metrics_snapshot(env, arrays):
+    """Reserved ``metrics.snapshot`` verb: this process's registry state.
+
+    The front-end federates these (``repro.telemetry.federate``) the same
+    way ``FederatedPS`` federates rows — histogram vectors are integers,
+    so the merge is exact regardless of arrival order.
+    """
+    from ..telemetry.registry import get_registry
+
+    return {"snapshot": get_registry().snapshot()}, ()
+
+
 def build_shard_table(kind: str = "both") -> MethodTable:
     """Method table for one shard-host worker: ``ps``, ``prov``, or ``both``."""
     if kind not in ("ps", "prov", "both"):
@@ -256,6 +268,10 @@ def build_shard_table(kind: str = "both") -> MethodTable:
         PSShardService().register(table)
     if kind in ("prov", "both"):
         ProvenanceShardService().register(table)
+    # Every shard host is self-observable: snapshot serialization walks the
+    # whole registry, so it runs heavy (off the event loop) like the other
+    # bulk reads.
+    table.register("metrics.snapshot", _metrics_snapshot, heavy=True)
     return table
 
 

@@ -1,0 +1,52 @@
+"""repro.telemetry -- self-observability for the analysis fleet.
+
+Metrics registry (Counter / Gauge / log2-bucket Histogram, deterministic
+and bitwise-mergeable across shards), Prometheus text exposition,
+``metrics.snapshot`` federation, and opt-in self-tracing into the
+Chrome-trace export.  See ``docs/telemetry.md``.
+"""
+
+from . import registry as registry  # noqa: F401  (modules, for `tm.registry`)
+from .exposition import CONTENT_TYPE, parse_exposition, render_exposition  # noqa: F401
+from .federate import (  # noqa: F401
+    METRICS_SNAPSHOT_VERB,
+    federated_snapshot,
+    fetch_shard_snapshot,
+)
+from .registry import (  # noqa: F401
+    BUCKET_COUNT,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    bucket_bounds,
+    bucket_index,
+    get_registry,
+    is_enabled,
+    merge_snapshots,
+    set_enabled,
+)
+from .selftrace import SELF_TRACE_PID, SelfTracer, get_self_tracer  # noqa: F401
+
+__all__ = [
+    "BUCKET_COUNT",
+    "CONTENT_TYPE",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "METRICS_SNAPSHOT_VERB",
+    "MetricRegistry",
+    "SELF_TRACE_PID",
+    "SelfTracer",
+    "bucket_bounds",
+    "bucket_index",
+    "federated_snapshot",
+    "fetch_shard_snapshot",
+    "get_registry",
+    "get_self_tracer",
+    "is_enabled",
+    "merge_snapshots",
+    "parse_exposition",
+    "render_exposition",
+    "set_enabled",
+]

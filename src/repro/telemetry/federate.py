@@ -1,0 +1,76 @@
+"""Federate metric snapshots from out-of-process shards.
+
+Every RPC shard host registers the reserved ``metrics.snapshot`` verb
+(see ``repro.net.shards.build_shard_table``); this module is the
+front-end side -- it dials each endpoint, collects the snapshots, and
+merges them with the local registry's under per-process ``proc`` labels.
+Same federation pattern as ``FederatedPS``: the merge is element-wise
+integer addition over the histogram vectors, so the result is identical
+no matter which shard replies first.
+
+Blocking RPC lives here, so callers must run it off the event loop --
+the viz gateway invokes it from the worker pool (its ``/metrics``
+handler is offloaded exactly like ``/provenance``).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+from .registry import get_registry, merge_snapshots
+
+__all__ = ["METRICS_SNAPSHOT_VERB", "fetch_shard_snapshot", "federated_snapshot"]
+
+# Reserved RPC verb every shard table exposes.
+METRICS_SNAPSHOT_VERB = "metrics.snapshot"
+
+
+def fetch_shard_snapshot(endpoint: Tuple[str, int],
+                         timeout: float = 5.0) -> Mapping[str, dict]:
+    """Fetch one shard's registry snapshot over RPC (blocking)."""
+    from ..net.client import RPCClient
+
+    client = RPCClient.shared((endpoint[0], int(endpoint[1])))
+    try:
+        env, _arrays = client.call(METRICS_SNAPSHOT_VERB, {}, timeout=timeout)
+    finally:
+        client.close()
+    return env.get("snapshot", {})
+
+
+def federated_snapshot(
+    shard_endpoints: Sequence[Tuple[str, int]] = (),
+    local_proc: str = "gateway",
+    timeout: float = 5.0,
+) -> Tuple[Dict[str, dict], List[str]]:
+    """Local snapshot + every reachable shard's, merged under ``proc`` labels.
+
+    Returns ``(merged_snapshot, errors)``.  A shard that cannot be
+    reached degrades to an entry in ``errors`` (and a mark in the
+    ``repro_metrics_federation_errors_total`` counter) rather than
+    failing the whole exposition -- a scraper should still see the
+    healthy processes.
+    """
+    snaps: List[Mapping[str, dict]] = [get_registry().snapshot()]
+    procs: List[str] = [local_proc]
+    errors: List[str] = []
+    for i, ep in enumerate(shard_endpoints):
+        try:
+            snaps.append(fetch_shard_snapshot(ep, timeout=timeout))
+            procs.append("shard%d" % i)
+        except Exception as exc:  # degraded, not fatal
+            errors.append("shard%d %s:%d: %s" % (i, ep[0], int(ep[1]), exc))
+    merged = merge_snapshots(snaps, proc_label=procs)
+    if errors:
+        fam = merged.setdefault(
+            "repro_metrics_federation_errors",
+            {
+                "type": "gauge",
+                "help": "Shards that failed to answer metrics.snapshot this scrape.",
+                "labelnames": ["proc"],
+                "series": {},
+            },
+        )
+        fam["series"][json.dumps([["proc", local_proc]])] = len(errors)
+    return merged, errors

@@ -22,6 +22,42 @@ from repro.core.provenance import FederatedProvenanceDB, ProvenanceDB
 from repro.core.ps import BatchedPSClient, FederatedPS, ParameterServer
 from repro.core.reduction import Reducer, merge_stats
 from repro.core.stats import RunningStats
+from repro.telemetry import registry as telemetry
+from repro.telemetry.selftrace import SELF_TRACE_PID, get_self_tracer
+
+_INGEST_STAGES = ("ad", "reduce", "ps", "prov", "write", "publish")
+
+
+class _StageTimer:
+    """Per-frame stage clock: marks observe the stage histogram and, when
+    self-tracing, record the stage as a span."""
+
+    __slots__ = ("_hists", "_tracer", "_last")
+
+    def __init__(self, hists, tracer):
+        self._hists = hists
+        self._tracer = tracer
+        self._last = time.perf_counter_ns()
+
+    def mark(self, stage: str) -> None:
+        now = time.perf_counter_ns()
+        dur_ns = now - self._last
+        self._hists[stage].observe(dur_ns // 1000)
+        if self._tracer is not None:
+            self._tracer.record(
+                f"ingest:{stage}", self._last // 1000, dur_ns // 1000
+            )
+        self._last = now
+
+
+class _NullTimer:
+    __slots__ = ()
+
+    def mark(self, stage: str) -> None:
+        pass
+
+
+_NULL_TIMER = _NullTimer()
 
 
 @dataclasses.dataclass
@@ -56,8 +92,30 @@ class ChimbukoMonitor:
         export_trace: Optional[str] = None,
         stream_path: Optional[str] = None,
         viz_serve: Optional[int] = None,
+        self_trace: Optional[bool] = None,
     ):
         self.registry = registry or FunctionRegistry()
+        # Kept for observability: the gateway's /metrics federates
+        # metrics.snapshot from these endpoints on socket transports.
+        self.shard_endpoints = list(shard_endpoints or [])
+        # Self-observability: per-frame pipeline stage timings, plus the
+        # opt-in self-trace (REPRO_SELF_TRACE=1 or self_trace=True) that
+        # drains the analyzer's own spans into the live trace export as a
+        # dedicated process group.
+        _stage_family = telemetry.get_registry().histogram(
+            "repro_frame_stage_us",
+            "Per-frame ingest pipeline stage latency in microseconds.",
+            ["stage"],
+        )
+        self._m_stage = {s: _stage_family.labels(stage=s) for s in _INGEST_STAGES}
+        self._m_frames = telemetry.get_registry().counter(
+            "repro_frames_ingested_total",
+            "Frames run through the full in-situ ingest path.",
+        )
+        self._selftrace = get_self_tracer()
+        if self_trace is not None:
+            self._selftrace.set_enabled(bool(self_trace))
+        self._selftrace_proc_named = False
         # PS federation (paper §III-B2): with ps_shards > 1 the stats table
         # is partitioned over fid space across shard instances; clients can
         # additionally coalesce ps_batch_frames deltas per push.  With
@@ -160,11 +218,21 @@ class ChimbukoMonitor:
 
     def ingest(self, frame: Frame) -> ADFrameResult:
         """Full in-situ path for one rank-frame."""
+        if telemetry.ENABLED:
+            timer = _StageTimer(
+                self._m_stage,
+                self._selftrace if self._selftrace.enabled else None,
+            )
+        else:
+            timer = _NULL_TIMER
         res = self._ad(frame.rank).process_frame(frame)
+        timer.mark("ad")
         kept_idx = self.reducers[frame.rank].reduce(res)
         kept = res.records[kept_idx]
         self.kept[(frame.rank, frame.step)] = kept
+        timer.mark("reduce")
         self.ps.report_anomalies(frame.rank, frame.step, res.n_anomalies)
+        timer.mark("ps")
         anom: List[Tuple[int, int, int]] = []
         if res.n_anomalies:
             self.provdb.ingest(res, frame.comm_events)
@@ -177,6 +245,7 @@ class ChimbukoMonitor:
                 (int(k), int(seq), int(sev))
                 for k, (seq, sev) in zip(kpos, self.provdb.last_ingest)
             ]
+        timer.mark("prov")
         ts = int(res.records["exit"].max()) if len(res.records) else None
         key = (frame.rank, frame.step)
         self.frame_meta[key] = (ts, len(res.records), res.n_anomalies)
@@ -188,13 +257,31 @@ class ChimbukoMonitor:
                     anomalies=anom, n_records=len(res.records),
                     n_anomalies=res.n_anomalies, ts=ts,
                 )
+        timer.mark("write")
         self.frames_ingested += 1
+        self._m_frames.inc()
         if self.viz_gateway is not None:
             self.viz_gateway.publish_frame(
                 frame.rank, frame.step, res.n_anomalies,
                 severity=max((sev for _k, _s, sev in anom), default=0),
             )
+        timer.mark("publish")
+        if self._trace_writer is not None and self._selftrace.enabled:
+            self._drain_selftrace()
         return res
+
+    def _drain_selftrace(self) -> None:
+        """Append the analyzer's own spans (this monitor's ingest stages,
+        RPC dispatch, heavy offloads) to the live trace export as complete
+        events in a dedicated process group."""
+        writer = self._trace_writer
+        if not self._selftrace_proc_named:
+            writer.set_process(SELF_TRACE_PID, "repro.telemetry (self)",
+                               sort_index=SELF_TRACE_PID)
+            self._selftrace_proc_named = True
+        for name, tid, t0_us, dur_us, args in self._selftrace.drain():
+            writer.complete(SELF_TRACE_PID, tid, name, t0_us, dur_us,
+                            args=args, cat="selftrace")
 
     # ---------------------------------------------------------- stragglers
     def on_straggler(self, cb: Callable[[StragglerEvent], None]) -> None:
@@ -261,6 +348,8 @@ class ChimbukoMonitor:
             self.viz_gateway = None
         self.provdb.close()
         if self._trace_writer is not None:
+            if self._selftrace.enabled:
+                self._drain_selftrace()  # spans since the last ingest
             self._trace_writer.close()
             self._trace_writer = None
         if self._stream_writer is not None:

@@ -45,6 +45,10 @@ import numpy as np
 
 from repro.lint import runtime as san
 from repro.net.server import EventLoopConn, EventLoopServer
+from repro.telemetry import registry as telemetry
+from repro.telemetry.exposition import CONTENT_TYPE as _METRICS_CONTENT_TYPE
+from repro.telemetry.exposition import render_exposition
+from repro.telemetry.federate import federated_snapshot
 
 from . import http as H
 from . import ws as W
@@ -173,8 +177,34 @@ class VizGateway(EventLoopServer):
         )
         self._max_pipeline = max(int(max_pipeline), 1)
         self._viewers: Set[_VizConn] = set()  # loop-thread-owned
-        self.broadcasts = 0
-        self.viewers_dropped = 0  # shed past ws_kill_water
+        # Registry counters (internally locked, exposed at /metrics); the
+        # public broadcasts/viewers_dropped names survive as properties.
+        _reg = telemetry.get_registry()
+        self._m_broadcasts = _reg.counter(
+            "repro_ws_broadcasts_total",
+            "WebSocket frame broadcasts fanned out to viewers.",
+            ["server"],
+        ).labels(server=self._telemetry_server)
+        self._m_viewers_dropped = _reg.counter(
+            "repro_ws_viewers_dropped_total",
+            "Viewers shed past ws_kill_water (close 1013).",
+            ["server"],
+        ).labels(server=self._telemetry_server)
+        self._m_viewers = _reg.gauge(
+            "repro_ws_viewers",
+            "Connected WebSocket viewers.",
+            ["server"],
+        ).labels(server=self._telemetry_server)
+
+    @property
+    def broadcasts(self) -> int:
+        """Broadcasts fanned out (0 when REPRO_TELEMETRY=0)."""
+        return self._m_broadcasts.value
+
+    @property
+    def viewers_dropped(self) -> int:
+        """Viewers shed past ws_kill_water (0 when REPRO_TELEMETRY=0)."""
+        return self._m_viewers_dropped.value
 
     # ------------------------------------------------------------ data senders
     def publish(self, payload: Dict[str, Any]) -> None:
@@ -190,19 +220,35 @@ class VizGateway(EventLoopServer):
 
     def publish_frame(self, rank: int, step: int, n_anomalies: int,
                       severity: int = 0) -> None:
-        """Broadcast one ingested frame's delta (the per-frame schema)."""
-        self.publish({
+        """Broadcast one ingested frame's delta (the per-frame schema).
+
+        When telemetry is on, the payload carries a small ``metrics``
+        summary so dashboards see gateway health without scraping
+        ``/metrics``.  Composed once here, so every viewer of one
+        broadcast receives the identical message.
+        """
+        payload: Dict[str, Any] = {
             "type": "frame", "rank": int(rank), "step": int(step),
             "n_anomalies": int(n_anomalies), "severity": int(severity),
-        })
+        }
+        if telemetry.ENABLED:
+            payload["metrics"] = self.metrics_summary()
+        self.publish(payload)
+
+    def metrics_summary(self) -> Dict[str, int]:
+        """Gateway-health counters riding the /ws frame broadcast."""
+        return {
+            "frames": int(getattr(self.monitor, "frames_ingested", 0)),
+            "viewers": len(self._viewers),
+            "broadcasts": self.broadcasts,
+            "backpressure_pauses": self.backpressure_pauses,
+            "viewers_dropped": self.viewers_dropped,
+        }
 
     def _broadcast(self, frame: bytes) -> None:
         if san.ENABLED:
             san.assert_loop_thread(self)
-        # _stats_lock (from EventLoopServer): these public counters are
-        # polled cross-thread by tests and monitoring.
-        with self._stats_lock:
-            self.broadcasts += 1
+        self._m_broadcasts.inc()
         for conn in list(self._viewers):
             if conn.closed:
                 self._viewers.discard(conn)
@@ -210,8 +256,7 @@ class VizGateway(EventLoopServer):
             if conn.ws_closing:
                 continue
             if conn.out_bytes > self._ws_kill_water:
-                with self._stats_lock:
-                    self.viewers_dropped += 1
+                self._m_viewers_dropped.inc()
                 self._ws_fail(conn, W.CLOSE_TRY_AGAIN, "viewer too far behind")
                 continue
             self._send(conn, frame)
@@ -231,6 +276,8 @@ class VizGateway(EventLoopServer):
 
     def _on_conn_closed(self, conn: _VizConn) -> None:
         self._viewers.discard(conn)
+        if telemetry.ENABLED:
+            self._m_viewers.set(len(self._viewers))
 
     def _on_data(self, conn: _VizConn, data: bytes) -> None:
         if conn.mode == "ws":
@@ -307,12 +354,19 @@ class VizGateway(EventLoopServer):
                 lambda: self.viz.provenance_view(limit=limit, **q),
             ))
             return
+        if path == "/metrics":
+            # Prometheus exposition.  Federating the shard snapshots is
+            # blocking RPC, so like /provenance it runs on a worker.
+            conn.busy = True
+            self._offload(lambda: self._run_metrics(conn, req, etag))
+            return
         if path == "/":
             # Pure loop-owned counters: the only view that stays inline.
             body = _dumps({
                 "service": "repro.viz.gateway",
                 "endpoints": ["/dashboard", "/series", "/function",
-                              "/callstack", "/provenance", "/trace", "/ws"],
+                              "/callstack", "/provenance", "/trace",
+                              "/metrics", "/ws"],
                 "frames": int(getattr(self.monitor, "frames_ingested", 0)),
                 "viewers": len(self._viewers),
             })
@@ -386,6 +440,30 @@ class VizGateway(EventLoopServer):
             fail = True
         self._post(lambda: self._complete_heavy(conn, resp, fail))
 
+    def _run_metrics(self, conn: _VizConn, req: H.HttpRequest, etag: str) -> None:
+        """Worker-side ``/metrics``: local registry + federated shard
+        snapshots rendered as Prometheus text exposition 0.0.4.
+
+        A shard that fails to answer ``metrics.snapshot`` degrades to a
+        ``repro_metrics_federation_errors`` gauge instead of a 500 — a
+        scraper should still see the healthy processes.
+        """
+        if san.ENABLED:
+            san.assert_worker_thread(self)
+        try:
+            endpoints = list(getattr(self.monitor, "shard_endpoints", None) or ())
+            merged, _errors = federated_snapshot(endpoints, local_proc="gateway")
+            body = render_exposition(merged).encode("utf-8")
+            resp = H.build_response(
+                200, body, content_type=_METRICS_CONTENT_TYPE,
+                headers=(("ETag", etag),), keep_alive=req.keep_alive,
+            )
+            fail = not req.keep_alive
+        except Exception as e:  # noqa: BLE001 - worker bug answers 500
+            resp = H.error_response(H.HttpError(500, f"{type(e).__name__}: {e}"))
+            fail = True
+        self._post(lambda: self._complete_heavy(conn, resp, fail))
+
     def _run_trace(self, conn: _VizConn, req: H.HttpRequest, etag: str) -> None:
         """Worker-side ``/trace``: stream the export through chunked
         transfer with producer-side backpressure (see _TraceStream)."""
@@ -449,6 +527,8 @@ class VizGateway(EventLoopServer):
         conn.ws = W.WSDecoder(require_mask=True)
         conn.requests.clear()  # bytes after the upgrade head are WS frames
         self._viewers.add(conn)
+        if telemetry.ENABLED:
+            self._m_viewers.set(len(self._viewers))
         hello = _dumps({
             "type": "hello",
             "frames": int(getattr(self.monitor, "frames_ingested", 0)),

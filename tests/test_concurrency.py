@@ -74,20 +74,21 @@ def test_subscribe_during_dispatch_loses_no_subscriber():
 def test_backpressure_counters_exact_under_contention():
     """lint: lockset-counter — ``backpressure_pauses``/``resumes`` were
     bare ``+=`` on the loop thread while tests/monitors read them
-    cross-thread.  The fix guards them with ``_stats_lock``; this hammers
-    the same lock-guarded read-modify-write pattern from many threads and
-    demands an exact total (a bare += drops updates under contention)."""
+    cross-thread.  PR 8 moved them into lock-disciplined telemetry
+    ``Counter``s; this hammers the server's own pause counter from many
+    threads and demands an exact total (a bare += drops updates under
+    contention), then checks the read side the old fields proxied to."""
     table = MethodTable()
     table.register("noop", lambda env, arrays: ({}, ()))
     server = RPCServer(table)
     per_thread, n_threads = 3000, 8
+    base = server.backpressure_pauses  # ephemeral-port label could be reused
     switch = sys.getswitchinterval()
     sys.setswitchinterval(1e-6)
     try:
         def bump():
             for _ in range(per_thread):
-                with server._stats_lock:
-                    server.backpressure_pauses += 1
+                server._m_backpressure_pauses.inc()
 
         ts = [threading.Thread(target=bump) for _ in range(n_threads)]
         for t in ts:
@@ -97,7 +98,7 @@ def test_backpressure_counters_exact_under_contention():
     finally:
         sys.setswitchinterval(switch)
         server.stop()
-    assert server.backpressure_pauses == per_thread * n_threads
+    assert server.backpressure_pauses - base == per_thread * n_threads
 
 
 # ------------------------------------------- sanitizer on a live RPC server

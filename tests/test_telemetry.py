@@ -1,0 +1,390 @@
+"""repro.telemetry: registry semantics, exposition format, federation,
+and self-tracing.
+
+The registry's two load-bearing promises get the heaviest coverage:
+
+* **Exactness under contention** — counters are lock-guarded, so N
+  threads x M increments must total exactly N*M (a bare ``+=`` drops
+  updates; that is the lockset-counter bug class repro.lint hunts).
+* **Merge algebra** — histogram snapshots are integer vectors, so
+  merging shard snapshots must be associative and commutative (the viz
+  gateway federates ``metrics.snapshot`` replies in arrival order, which
+  is nondeterministic).  Property-tested when hypothesis is available,
+  with a fixed-seed fallback that always runs.
+
+The federation test is end-to-end: two *out-of-process* shard workers +
+the in-process gateway, scraped over a real socket through ``/metrics``.
+"""
+import json
+import sys
+import threading
+import urllib.request
+
+import pytest
+
+from repro.telemetry import (
+    CONTENT_TYPE,
+    MetricRegistry,
+    bucket_bounds,
+    bucket_index,
+    merge_snapshots,
+    parse_exposition,
+    render_exposition,
+)
+from repro.telemetry import registry as telemetry
+from repro.telemetry.registry import BUCKET_COUNT, Histogram
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ======================================================================
+# registry basics
+# ======================================================================
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricRegistry()
+    c = reg.counter("c_total", "help")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = reg.gauge("g", "help")
+    g.set(7)
+    g.inc(2)
+    g.dec()
+    assert g.value == 8
+    h = reg.histogram("h_us", "help")
+    for v in (0, 1, 3, 100, 5000):
+        h.observe(v)
+    assert h.count == 5
+    assert h.sum == 0 + 1 + 3 + 100 + 5000
+    assert 0 < h.percentile(50) <= h.percentile(95)
+
+
+def test_labels_children_and_reregistration():
+    reg = MetricRegistry()
+    fam = reg.counter("req_total", "help", ["method"])
+    a = fam.labels(method="get")
+    assert fam.labels(method="get") is a  # same label set -> same child
+    assert fam.labels(method="put") is not a
+    with pytest.raises(ValueError):
+        fam.labels(verb="get")  # undeclared labelname
+    assert reg.counter("req_total", "help", ["method"]) is fam
+    with pytest.raises(ValueError):
+        reg.gauge("req_total", "help", ["method"])  # kind mismatch
+    with pytest.raises(ValueError):
+        reg.counter("req_total", "help", ["other"])  # labelnames mismatch
+
+
+def test_disabled_mutators_are_noops():
+    reg = MetricRegistry()
+    c = reg.counter("c_total", "help")
+    h = reg.histogram("h_us", "help")
+    prev = telemetry.ENABLED
+    try:
+        telemetry.set_enabled(False)
+        c.inc(100)
+        h.observe(42)
+    finally:
+        telemetry.set_enabled(prev)
+    assert c.value == 0
+    assert h.count == 0
+
+
+def test_bucket_index_boundaries():
+    # le bounds are 1, 2, 4, ... 2**30, +Inf; index = first bound >= v.
+    assert bucket_index(0) == 0
+    assert bucket_index(1) == 0
+    assert bucket_index(1.5) == 1
+    assert bucket_index(2) == 1
+    assert bucket_index(3) == 2
+    assert bucket_index(2 ** 30) == 30
+    assert bucket_index(2 ** 30 + 1) == BUCKET_COUNT - 1  # +Inf
+    bounds = bucket_bounds()
+    assert len(bounds) == BUCKET_COUNT
+    assert bounds[-1] == float("inf")
+    for v in (0, 1, 2, 3, 7, 1000, 2 ** 29 + 1):
+        assert bounds[bucket_index(v)] >= v
+
+
+def test_counter_exact_under_8_thread_contention():
+    reg = MetricRegistry()
+    c = reg.counter("contended_total", "help")
+    per_thread, n_threads = 5000, 8
+    switch = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)
+    try:
+        ts = [
+            threading.Thread(
+                target=lambda: [c.inc() for _ in range(per_thread)]
+            )
+            for _ in range(n_threads)
+        ]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    finally:
+        sys.setswitchinterval(switch)
+    assert c.value == per_thread * n_threads
+
+
+# ======================================================================
+# merge algebra
+# ======================================================================
+
+def _hist_snapshot(values):
+    reg = MetricRegistry()
+    fam = reg.histogram("m_us", "help", ["shard"])
+    h = fam.labels(shard="s")
+    for v in values:
+        h.observe(v)
+    return reg.snapshot()
+
+
+def _merge2(a, b):
+    return merge_snapshots([a, b])
+
+
+def test_merge_associative_commutative_fixed_seed():
+    import random
+
+    rng = random.Random(7)
+    snaps = [
+        _hist_snapshot([rng.randrange(0, 1 << 20) for _ in range(50)])
+        for _ in range(3)
+    ]
+    a, b, c = snaps
+    left = _merge2(_merge2(a, b), c)
+    right = _merge2(a, _merge2(b, c))
+    assert json.dumps(left, sort_keys=True) == json.dumps(right, sort_keys=True)
+    assert json.dumps(_merge2(a, b), sort_keys=True) == json.dumps(
+        _merge2(b, a), sort_keys=True
+    )
+    # Merged totals are exact integer sums (snapshot layout: counts[32]
+    # then sum then count).
+    series = left["m_us"]["series"]
+    (vec,) = series.values()
+    assert vec[-1] == 150  # merged count
+    assert vec[-2] == sum(
+        s["m_us"]["series"][k][-2] for s in snaps for k in s["m_us"]["series"]
+    )
+
+
+def test_merge_proc_label_keeps_series_distinct():
+    a = _hist_snapshot([10, 20])
+    b = _hist_snapshot([30])
+    merged = merge_snapshots([a, b], proc_label=["shard0", "shard1"])
+    series = merged["m_us"]["series"]
+    assert len(series) == 2  # per-proc series did not collapse
+    procs = {dict(json.loads(k)).get("proc") for k in series}
+    assert procs == {"shard0", "shard1"}
+    assert "proc" in merged["m_us"]["labelnames"]
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(st.integers(min_value=0, max_value=1 << 31), max_size=40),
+        st.lists(st.integers(min_value=0, max_value=1 << 31), max_size=40),
+        st.lists(st.integers(min_value=0, max_value=1 << 31), max_size=40),
+    )
+    def test_merge_associative_commutative_property(xs, ys, zs):
+        a, b, c = _hist_snapshot(xs), _hist_snapshot(ys), _hist_snapshot(zs)
+        left = _merge2(_merge2(a, b), c)
+        right = _merge2(a, _merge2(b, c))
+        assert json.dumps(left, sort_keys=True) == json.dumps(
+            right, sort_keys=True
+        )
+        assert json.dumps(_merge2(a, b), sort_keys=True) == json.dumps(
+            _merge2(b, a), sort_keys=True
+        )
+        (vec,) = left["m_us"]["series"].values()
+        assert vec[-1] == len(xs) + len(ys) + len(zs)
+
+
+# ======================================================================
+# exposition format
+# ======================================================================
+
+def _sample_registry():
+    reg = MetricRegistry()
+    reg.counter("req_total", "requests", ["method"]).labels(method="get").inc(3)
+    reg.gauge("depth", "queue depth").set(2)
+    h = reg.histogram("lat_us", "latency", ["server"]).labels(server="a:1")
+    for v in (1, 5, 1000):
+        h.observe(v)
+    return reg
+
+
+def test_render_parse_roundtrip_line_by_line():
+    text = render_exposition(_sample_registry().snapshot())
+    assert text.endswith("\n")
+    # Every line must be a comment or a well-formed sample — checked here
+    # explicitly even though parse_exposition enforces it, so a format
+    # regression points at the exact line.
+    for i, line in enumerate(text.splitlines(), 1):
+        assert line.startswith("# ") or " " in line, f"line {i}: {line!r}"
+    fams = parse_exposition(text)
+    assert set(fams) == {"req_total", "depth", "lat_us"}
+    assert fams["req_total"]["type"] == "counter"
+    assert fams["lat_us"]["type"] == "histogram"
+    samples = {n: (l, v) for n, l, v in fams["req_total"]["samples"]}
+    assert samples["req_total"] == ({"method": "get"}, 3.0)
+    # Histogram exposition: cumulative buckets, +Inf present, sum+count.
+    names = [n for n, _l, _v in fams["lat_us"]["samples"]]
+    assert "lat_us_sum" in names and "lat_us_count" in names
+    inf_bucket = [
+        v for n, l, v in fams["lat_us"]["samples"]
+        if n == "lat_us_bucket" and l.get("le") == "+Inf"
+    ]
+    assert inf_bucket == [3.0]
+    assert "version=0.0.4" in CONTENT_TYPE
+
+
+def test_parse_rejects_malformed_expositions():
+    with pytest.raises(ValueError):
+        parse_exposition("not a metric line at all !!!\n")
+    with pytest.raises(ValueError):  # sample without TYPE is fine, bad name is not
+        parse_exposition("9bad_name 1\n")
+    # Non-cumulative histogram buckets must be rejected.
+    bad_hist = (
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 5\n'
+        'h_bucket{le="2"} 3\n'
+        'h_bucket{le="+Inf"} 5\n'
+        "h_sum 9\n"
+        "h_count 5\n"
+    )
+    with pytest.raises(ValueError):
+        parse_exposition(bad_hist)
+    # Missing +Inf bucket must be rejected.
+    with pytest.raises(ValueError):
+        parse_exposition(
+            "# TYPE h histogram\n" 'h_bucket{le="1"} 5\n' "h_sum 9\nh_count 5\n"
+        )
+
+
+# ======================================================================
+# federation: /metrics over real sockets from out-of-process shards
+# ======================================================================
+
+def test_metrics_federated_from_out_of_process_shards():
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.launch.shard_server import ShardServerPool
+    from repro.telemetry.federate import fetch_shard_snapshot
+    from repro.trace.monitor import ChimbukoMonitor
+
+    spec = nwchem_like(anomaly_rate=0.05)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 40.0
+    gen = WorkloadGenerator(spec, n_ranks=2, seed=3)
+    with ShardServerPool(2, kind="both") as pool:
+        monitor = ChimbukoMonitor(
+            num_funcs=len(gen.registry), registry=gen.registry, min_samples=4,
+            ps_transport="socket", provdb_transport="socket",
+            shard_endpoints=pool.endpoints, viz_serve=0,
+        )
+        try:
+            for step in range(4):
+                for rank in range(2):
+                    frame, _ = gen.frame(rank, step)
+                    monitor.ingest(frame)
+            # The reserved verb federates raw snapshots shard-by-shard...
+            shard_snap = fetch_shard_snapshot(pool.endpoints[0])
+            assert "repro_rpc_latency_us" in shard_snap
+            assert "repro_loop_lag_us" in shard_snap
+            # ...and /metrics serves the merged fleet view over HTTP.
+            host, port = monitor.viz_gateway.endpoint
+            resp = urllib.request.urlopen(
+                f"http://{host}:{port}/metrics", timeout=30
+            )
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            fams = parse_exposition(resp.read().decode("utf-8"))
+            for family in (
+                "repro_loop_lag_us",
+                "repro_rpc_latency_us",
+                "repro_worker_queue_depth",
+                "repro_backpressure_pauses_total",
+                "repro_frame_stage_us",
+                "repro_ps_update_us",
+            ):
+                assert family in fams, family
+            procs = {
+                labels["proc"]
+                for fam in fams.values()
+                for _n, labels, _v in fam["samples"]
+                if "proc" in labels
+            }
+            assert {"gateway", "shard0", "shard1"} <= procs
+        finally:
+            monitor.close()
+
+
+# ======================================================================
+# self-trace: the tool's own spans in the Chrome-trace export
+# ======================================================================
+
+def test_self_trace_spans_validate(tmp_path):
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.export.chrome_trace import validate_trace
+    from repro.telemetry.selftrace import SELF_TRACE_PID
+    from repro.trace.monitor import ChimbukoMonitor
+
+    spec = nwchem_like(anomaly_rate=0.05)
+    for f in spec.funcs.values():
+        f.anomaly_scale = 40.0
+    gen = WorkloadGenerator(spec, n_ranks=2, seed=3)
+    trace_path = str(tmp_path / "trace.json")
+    monitor = ChimbukoMonitor(
+        num_funcs=len(gen.registry), registry=gen.registry, min_samples=4,
+        export_trace=trace_path, self_trace=True,
+    )
+    for step in range(4):
+        for rank in range(2):
+            frame, _ = gen.frame(rank, step)
+            monitor.ingest(frame)
+    monitor.close()
+    counts = validate_trace(trace_path)
+    assert counts["completes"] > 0
+    with open(trace_path) as f:
+        events = json.load(f)["traceEvents"]
+    own = [e for e in events if e.get("pid") == SELF_TRACE_PID]
+    spans = {e["name"] for e in own if e.get("ph") == "X"}
+    assert any(n.startswith("ingest:") for n in spans)
+    # The self process group is named so Perfetto shows it as its own track.
+    procs = {
+        e["args"]["name"]
+        for e in events
+        if e.get("ph") == "M" and e.get("name") == "process_name"
+    }
+    assert "repro.telemetry (self)" in procs
+
+
+def test_self_trace_off_by_default(tmp_path):
+    from repro.core.sim import WorkloadGenerator, nwchem_like
+    from repro.telemetry.selftrace import SELF_TRACE_PID, get_self_tracer
+    from repro.trace.monitor import ChimbukoMonitor
+
+    # The tracer is a process-wide singleton; restore the fresh-process
+    # default (off) in case an earlier test opted in.
+    get_self_tracer().set_enabled(False)
+    spec = nwchem_like(anomaly_rate=0.05)
+    gen = WorkloadGenerator(spec, n_ranks=1, seed=3)
+    trace_path = str(tmp_path / "trace.json")
+    monitor = ChimbukoMonitor(
+        num_funcs=len(gen.registry), registry=gen.registry, min_samples=4,
+        export_trace=trace_path,
+    )
+    frame, _ = gen.frame(0, 0)
+    monitor.ingest(frame)
+    monitor.close()
+    with open(trace_path) as f:
+        events = json.load(f)["traceEvents"]
+    assert not [e for e in events if e.get("pid") == SELF_TRACE_PID]

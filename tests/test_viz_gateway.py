@@ -566,9 +566,14 @@ def test_ws_handshake_hello_and_broadcast(served):
     assert hello["frames"] == monitor.frames_ingested
     gw.publish_frame(2, 17, 3, severity=5)
     (msg,) = _recv_msgs(s, dec, 1)
-    assert json.loads(msg.data) == {
+    payload = json.loads(msg.data)
+    metrics = payload.pop("metrics")  # self-observability rider (PR 8)
+    assert payload == {
         "type": "frame", "rank": 2, "step": 17, "n_anomalies": 3,
         "severity": 5}
+    assert metrics["viewers"] == 1
+    assert {"frames", "broadcasts", "backpressure_pauses",
+            "viewers_dropped"} <= set(metrics)
     s.close()
     _wait(lambda: gw.n_viewers == 0, what="viewer cleanup")
 
