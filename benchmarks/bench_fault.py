@@ -1,0 +1,268 @@
+"""Crash-recovery benchmark for the fault-tolerant shard federation.
+
+Two questions, measured end to end (see docs/fault.md):
+
+  * **How fast does a killed shard come back?**  ``kill_recovery`` runs a
+    full monitored workload over socket transport with a supervised
+    worker pool, SIGKILLs a live worker at a seed-chosen frame, and
+    reports the *recovery stall*: the longest single ``ingest`` the
+    driver observes after the kill.  That one call absorbs everything —
+    supervisor poll, worker respawn, WAL/JSONL replay, window re-send —
+    so it is the recovery time an operator would see as a pipeline
+    hiccup.  The run must still byte-match a no-fault twin (PS snapshot
+    and provenance JSONL family): recovery that loses or duplicates data
+    fails the bench, not just the tests.
+  * **What does replay cost at restart?**  ``wal_replay`` builds a WAL of
+    N sparse pushes and times a cold :class:`repro.core.ps.PSShard` open
+    (read + CRC + re-apply), reporting records/s and bytes — the floor
+    on worker restart latency at a given log length (compaction keeps
+    the log near one snapshot, so this is also roughly the worst case).
+
+Faults are injected with :mod:`repro.fault.chaos` — every kill frame and
+victim index derives from a seed, so a regression reproduces exactly.
+
+    PYTHONPATH=src python benchmarks/bench_fault.py [--smoke] \
+        [--json BENCH_fault.json]
+
+Acceptance: every kill run completes and byte-matches its no-fault twin;
+(full runs) recovery stall under 10 s at every S — generous against the
+backoff schedule's worst case, tight against a respawn/replay hang.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ps import PSShard
+from repro.core.sim import WorkloadGenerator, nwchem_like
+from repro.core.stats import StatsTable
+from repro.fault.chaos import ChaosStream, kill_process
+from repro.fault.policy import RetryPolicy
+from repro.fault.wal import PSWal, wal_path
+from repro.launch.shard_server import ShardServerPool
+from repro.trace.monitor import ChimbukoMonitor
+
+RUN_INFO = {"timestamp": 0.0}
+
+
+# ------------------------------------------------------------------ wal replay
+def _sparse_push(rng, F: int) -> Tuple[np.ndarray, np.ndarray]:
+    n = int(rng.integers(8, 64))
+    delta = StatsTable(F).update_batch(
+        rng.integers(0, F, n), rng.lognormal(3.0, 1.0, n)
+    )
+    idx = np.flatnonzero(delta[:, 0] > 0).astype(np.int64)
+    return idx, np.ascontiguousarray(delta[idx])
+
+
+def run_wal_replay(
+    n_pushes: int = 2000,
+    num_funcs: int = 1024,
+    repeats: int = 3,
+) -> Dict:
+    """Cold-open cost of a WAL with ``n_pushes`` ROWS records (compaction
+    disabled so the measured log really holds every record)."""
+    rng = np.random.default_rng(0)
+    pushes = [_sparse_push(rng, num_funcs) for _ in range(n_pushes)]
+    with tempfile.TemporaryDirectory() as td:
+        p = wal_path(td, 0)
+        sh = PSShard(0, 1, num_funcs,
+                     wal=PSWal(p, compact_every=1 << 30, reset=True))
+        t0 = time.perf_counter()
+        for k, (idx, rows) in enumerate(pushes):
+            sh.push_rows(idx, rows, num_funcs, seq=k)
+        append_s = time.perf_counter() - t0
+        want = sh.stats.table.copy()
+        sh.close()
+        wal_bytes = os.path.getsize(p)
+
+        best: Optional[float] = None
+        for _rep in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            re = PSShard(0, 1, num_funcs,
+                         wal=PSWal(p, compact_every=1 << 30))
+            dt = time.perf_counter() - t0
+            assert re.stats.table.tobytes() == want.tobytes()
+            re.close()
+            best = dt if best is None else min(best, dt)
+    return {
+        "config": f"wal_replay_{n_pushes}",
+        "section": "wal",
+        "n_records": n_pushes,
+        "wal_bytes": wal_bytes,
+        "append_s": append_s,
+        "replay_s": best,
+        "records_per_s": n_pushes / best,
+        "mb_per_s": wal_bytes / best / 1e6,
+    }
+
+
+# --------------------------------------------------------------- kill recovery
+def _monitored_run(
+    tmp: str, S: int, kills: List[Tuple[int, int]],
+    steps: int, n_ranks: int,
+) -> Dict:
+    """One monitored socket-transport run; returns artifacts + timings."""
+    prov = os.path.join(tmp, "prov.jsonl")
+    with ShardServerPool(S, kind="both", supervise=True,
+                         supervise_poll=0.05) as pool:
+        mon = ChimbukoMonitor(
+            num_funcs=64, prov_path=prov, min_samples=8, alpha=6.0,
+            provdb_shards=S,
+            ps_transport="socket", provdb_transport="socket",
+            shard_endpoints=pool.endpoints,
+            ps_wal_dir=os.path.join(tmp, "wal"),
+            fault_policy=RetryPolicy(retries=8, base_delay=0.05),
+            run_info=RUN_INFO,
+        )
+        spec = nwchem_like(anomaly_rate=0.02)
+        for f in spec.funcs.values():
+            f.anomaly_scale = 40.0
+        gen = WorkloadGenerator(spec, n_ranks=n_ranks, seed=0)
+        kill_at = dict(kills)
+        ingest_s: List[float] = []
+        post_kill: List[float] = []
+        killed = False
+        nframe = 0
+        t_run = time.perf_counter()
+        for step in range(steps):
+            for rank in range(n_ranks):
+                frame, _ = gen.frame(rank, step)
+                c0 = time.perf_counter()
+                mon.ingest(frame)
+                dt = time.perf_counter() - c0
+                (post_kill if killed else ingest_s).append(dt)
+                nframe += 1
+                if nframe in kill_at:
+                    kill_process(pool.procs[kill_at[nframe]])
+                    killed = True
+        run_s = time.perf_counter() - t_run
+        snap = mon.ps.snapshot().table.copy()
+        mon.close()
+        files = {}
+        for name in sorted(os.listdir(tmp)):
+            if name.startswith("prov.jsonl"):
+                with open(os.path.join(tmp, name), "rb") as f:
+                    files[name] = f.read()
+    return {
+        "snap": snap,
+        "files": files,
+        "restarts": pool.restarts,
+        "run_s": run_s,
+        # The longest post-kill ingest is the recovery stall: it absorbs
+        # supervisor respawn + reconfigure + replay.  Empty when no kill.
+        "recovery_s": max(post_kill) if post_kill else 0.0,
+        "p50_ingest_s": float(np.median(ingest_s)) if ingest_s else 0.0,
+    }
+
+
+def run_kill_recovery(S: int, steps: int, n_ranks: int, seed: int) -> Dict:
+    """Kill-vs-clean twin runs at S shards; byte-match is part of the row."""
+    from repro.core.provenance import static_provenance
+
+    static_provenance()  # settle lazy env mutations (jax backend probe) so
+    # both twins' provenance headers capture the identical environment
+    cs = ChaosStream(seed)
+    frames_total = steps * n_ranks
+    kill_frame = frames_total // 3 + cs.below(frames_total // 3)
+    victim = cs.below(S)
+    with tempfile.TemporaryDirectory() as td:
+        ref_dir = os.path.join(td, "ref")
+        kill_dir = os.path.join(td, "kill")
+        os.makedirs(ref_dir)
+        os.makedirs(kill_dir)
+        ref = _monitored_run(ref_dir, S, [], steps, n_ranks)
+        got = _monitored_run(kill_dir, S, [(kill_frame, victim)], steps, n_ranks)
+    bitexact = (
+        got["snap"].tobytes() == ref["snap"].tobytes()
+        and got["files"] == ref["files"]
+    )
+    return {
+        "config": f"kill_recovery_S{S}",
+        "section": "recovery",
+        "shards": S,
+        "kill_frame": kill_frame,
+        "victim": victim,
+        "restarts": got["restarts"],
+        "recovery_s": got["recovery_s"],
+        "p50_ingest_s": got["p50_ingest_s"],
+        "run_s": got["run_s"],
+        "ref_run_s": ref["run_s"],
+        "run_overhead_pct": (got["run_s"] / ref["run_s"] - 1.0) * 100.0,
+        "bitexact": bitexact,
+    }
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny configuration for CI: one kill at S=2 plus a short WAL "
+        "replay; recovery-stall claims need the full run",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write rows + host metadata as a JSON trajectory file "
+        "(BENCH_fault.json) for cross-PR comparison",
+    )
+    args = ap.parse_args(list(argv))
+    if args.smoke:
+        wal_rows = [run_wal_replay(n_pushes=300, num_funcs=256, repeats=1)]
+        rec_rows = [run_kill_recovery(S=2, steps=10, n_ranks=3, seed=2026)]
+    else:
+        wal_rows = [
+            run_wal_replay(n_pushes=n) for n in (1000, 5000, 20000)
+        ]
+        rec_rows = [
+            run_kill_recovery(S=S, steps=30, n_ranks=4, seed=2026 + S)
+            for S in (1, 2, 4)
+        ]
+    rows = wal_rows + rec_rows
+    for r in wal_rows:
+        print(
+            f"fault/{r['config']},{r['replay_s'] * 1e6 / r['n_records']:.2f},"
+            f"records_per_s={r['records_per_s']:.0f};"
+            f"mb_per_s={r['mb_per_s']:.1f};wal_bytes={r['wal_bytes']}"
+        )
+    for r in rec_rows:
+        print(
+            f"fault/{r['config']},,recovery_s={r['recovery_s']:.3f};"
+            f"restarts={r['restarts']};"
+            f"run_overhead_pct={r['run_overhead_pct']:.1f};"
+            f"bitexact={'yes' if r['bitexact'] else 'NO'}"
+        )
+    # Acceptance: recovery must be lossless everywhere (smoke included);
+    # the stall bound is a full-run gate (smoke hosts spawn slowly).
+    ok = all(r["bitexact"] and r["restarts"] >= 1 for r in rec_rows)
+    print(f"fault/acceptance_bitexact_recovery,,{'PASS' if ok else 'FAIL'}")
+    if not args.smoke:
+        stall_ok = all(r["recovery_s"] <= 10.0 for r in rec_rows)
+        print(f"fault/acceptance_recovery_stall_10s,,{'PASS' if stall_ok else 'FAIL'}")
+        ok = ok and stall_ok
+    if args.json:
+        doc = {
+            "bench": "fault",
+            "smoke": bool(args.smoke),
+            "host": {
+                "platform": platform.platform(),
+                "python": sys.version.split()[0],
+                "cpus": os.cpu_count(),
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"fault/json_written,,{args.json}", file=sys.stderr)
+    return rows if ok else []
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main(sys.argv[1:]) else 1)

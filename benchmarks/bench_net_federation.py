@@ -386,6 +386,61 @@ def run_overhead(
     }
 
 
+def run_wal_overhead(
+    n_ranks: int = 8,
+    frames: int = 40,
+    num_funcs: int = 4096,
+    working_set: int = 512,
+    repeats: int = 3,
+    shards: int = 2,
+) -> Dict:
+    """A/B the write-ahead-log cost on the socket PS push path.
+
+    Same deltas through identical worker pools, with and without
+    ``wal_dir`` (which also arms the fault-tolerant window + per-shard
+    seq numbering — the configuration crash-tolerant runs actually use).
+    The WAL appends raw delta bytes and flushes per push inside the
+    worker, off the driver's hot path; full runs gate the end-to-end
+    delta at ≤10% (docs/fault.md)."""
+    deltas = _make_deltas(n_ranks, frames, num_funcs, working_set)
+    times: Dict[str, float] = {}
+    snaps: Dict[str, np.ndarray] = {}
+    for mode in ("off", "on"):
+        best: Optional[float] = None
+        for _rep in range(max(repeats, 1)):
+            telemetry.get_registry().reset()
+            pool = ShardServerPool(shards, kind="ps")
+            try:
+                with tempfile.TemporaryDirectory() as wd:
+                    fed = FederatedPS(
+                        num_funcs, transport="socket", endpoints=pool.endpoints,
+                        wal_dir=wd if mode == "on" else None,
+                    )
+                    dt, _ = _drive(fed, deltas)
+                    t0 = time.perf_counter()
+                    fed.drain()
+                    dt += time.perf_counter() - t0
+                    snaps[mode] = fed.snapshot().table
+                    fed.close()
+            finally:
+                pool.stop()
+            best = dt if best is None else min(best, dt)
+        times[mode] = best
+    # Durability must not perturb the math (float associativity only).
+    assert np.allclose(snaps["on"], snaps["off"], rtol=1e-6, atol=1e-6)
+    overhead_pct = (times["on"] / times["off"] - 1.0) * 100.0
+    return {
+        "config": "ps_wal_overhead",
+        "section": "overhead",
+        "transport": "socket",
+        "shards": shards,
+        "time_wal_on_s": times["on"],
+        "time_wal_off_s": times["off"],
+        "total_updates": n_ranks * frames,
+        "overhead_pct": overhead_pct,
+    }
+
+
 def _curve(rows: List[Dict], section: str, transport: str, metric: str) -> Dict[int, float]:
     return {
         r["shards"]: r[metric]
@@ -459,11 +514,16 @@ def main(argv=()):
         overhead_row = run_overhead(
             n_ranks=4, frames=10, num_funcs=1024, working_set=128, repeats=1
         )
+        wal_row = run_wal_overhead(
+            n_ranks=4, frames=10, num_funcs=1024, working_set=128, repeats=1,
+            shards=1,
+        )
     else:
         ps_rows = run_ps()
         prov_rows = run_prov()
         overhead_row = run_overhead()
-    rows = ps_rows + prov_rows + [overhead_row]
+        wal_row = run_wal_overhead()
+    rows = ps_rows + prov_rows + [overhead_row, wal_row]
     for r in ps_rows:
         print(
             f"net_federation/{r['config']},{r['time_s'] * 1e6 / r['total_updates']:.2f},"
@@ -482,6 +542,12 @@ def main(argv=()):
         f"overhead_pct={overhead_row['overhead_pct']:.2f};"
         f"on_s={overhead_row['time_telemetry_on_s']:.3f};"
         f"off_s={overhead_row['time_telemetry_off_s']:.3f}"
+    )
+    print(
+        f"net_federation/ps_wal_overhead,,"
+        f"overhead_pct={wal_row['overhead_pct']:.2f};"
+        f"on_s={wal_row['time_wal_on_s']:.3f};"
+        f"off_s={wal_row['time_wal_off_s']:.3f}"
     )
     speedups = {}
     for section, metric in (("ps", "updates_per_s"), ("prov", "docs_per_s")):
@@ -526,6 +592,15 @@ def main(argv=()):
             f"{'PASS' if tel_ok else 'FAIL'}"
         )
         ok = ok and tel_ok
+        # Durability must stay cheap enough to leave armed: ≤10% on the
+        # socket PS push path vs the same pool without a WAL.  Full runs
+        # only — smoke-scale A/Bs are dominated by pool spawn noise.
+        wal_ok = wal_row["overhead_pct"] <= 10.0
+        print(
+            "net_federation/acceptance_wal_overhead_10pct,,"
+            f"{'PASS' if wal_ok else 'FAIL'}"
+        )
+        ok = ok and wal_ok
     if args.json:
         doc = {
             "bench": "net_federation",

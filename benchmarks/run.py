@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   provdb_sharding   provenance DB ingest/query throughput vs shard count (§V)
   net_federation    in-process vs socket-worker shard scaling (repro.net)
   viz_gateway       HTTP view / /trace / WebSocket fan-out serving (§IV)
+  fault             WAL replay throughput + kill/recovery stall (repro.fault)
   kernels           Pallas-vs-XLA micro-benchmarks
   roofline          per-cell roofline terms from the dry-run artifacts
   lint              repro.lint full-pass latency over src/ (gate budget)
@@ -33,6 +34,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         bench_ad_scaling,
+        bench_fault,
         bench_kernels,
         bench_lint,
         bench_net_federation,
@@ -48,8 +50,8 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for mod in (bench_ad_scaling, bench_overhead, bench_reduction,
                 bench_ps_sharding, bench_provdb_sharding,
-                bench_net_federation, bench_viz_gateway, bench_kernels,
-                bench_roofline, bench_lint):
+                bench_net_federation, bench_viz_gateway, bench_fault,
+                bench_kernels, bench_roofline, bench_lint):
         try:
             if mod is bench_net_federation and args.net_json:
                 mod.main(["--json", args.net_json])

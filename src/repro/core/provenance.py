@@ -228,6 +228,21 @@ def _resume_order(docs: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
     return [doc for _, doc in ordered]
 
 
+def _truncate_torn_line(path: str) -> None:
+    """Drop a torn final line — what a crash mid-append leaves behind.
+
+    Everything after the last newline goes; complete lines are intact by
+    construction (appends go through one buffered writer in file order,
+    so only the final line can be partial)."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if not blob or blob.endswith(b"\n"):
+        return
+    cut = blob.rfind(b"\n") + 1
+    with open(path, "rb+") as f:
+        f.truncate(cut)
+
+
 class ProvenanceShard:
     """One provenance partition: a JSONL file plus an in-memory query index.
 
@@ -261,6 +276,7 @@ class ProvenanceShard:
         path: Optional[str] = None,
         append: bool = False,
         header: Optional[Dict[str, Any]] = None,
+        recover: bool = False,
     ):
         self.path = path
         self.docs: List[Dict[str, Any]] = []
@@ -280,10 +296,28 @@ class ProvenanceShard:
         self._resumed: List[Dict[str, Any]] = []
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            resuming = append and os.path.exists(path) and os.path.getsize(path) > 0
+            if recover and os.path.exists(path):
+                # Crash recovery: a SIGKILLed owner can leave a torn final
+                # line (partial buffered write); cut it before parsing.
+                _truncate_torn_line(path)
+            resuming = (
+                (append or recover)
+                and os.path.exists(path)
+                and os.path.getsize(path) > 0
+            )
             if resuming:
                 self._resumed = _read_docs(path)
                 self._fh = open(path, "a")
+                if recover:
+                    # Re-index our own surviving docs in place (write=False:
+                    # they are already on disk).  This restores the seq
+                    # dedup horizon, so a front-end replaying un-acked
+                    # batches afterwards is exactly-once — applied batches
+                    # skip, lost ones append where the crash left off.
+                    mine = [d for d in self._resumed if "seq" in d]
+                    for doc in _resume_order(mine):
+                        self.add(doc, int(doc["seq"]), write=False)
+                    self._resumed = [d for d in self._resumed if "seq" not in d]
             else:
                 self._fh = open(path, "w")
                 if header is not None:
@@ -537,6 +571,7 @@ class FederatedProvenanceDB:
         append: bool = False,
         transport: str = "local",
         endpoints=None,
+        fault_policy=None,
     ):
         if transport not in ("local", "socket"):
             raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
@@ -566,8 +601,13 @@ class FederatedProvenanceDB:
         if transport == "socket":
             from repro.net.shards import RemoteProvenanceShard  # lazy: no core→net dep
 
+            # fault_policy arms crash recovery on every stub: durable worker
+            # writes, reconnect + recover-reconfigure + seq-deduped replay
+            # on connection loss, degraded-mode spooling (repro.fault).
             self.shards = [
-                RemoteProvenanceShard(ep, path=p, append=append, header=header)
+                RemoteProvenanceShard(
+                    ep, path=p, append=append, header=header, policy=fault_policy
+                )
                 for ep, p in zip(endpoints, owned)
             ]
         else:

@@ -162,17 +162,71 @@ class PSShard:
     array — so ``self.stats.table`` is an atomically-swapped immutable-by-
     convention ref that the federation's aggregation pass may read without
     taking the lock.
+
+    Durability (``wal=``): every applied mutation is appended to a
+    :class:`repro.fault.wal.PSWal` *before* the merge, so a killed shard
+    restarted on the same log replays — through this class's own merge
+    code — to a bit-exact table, push count, and dedup seq.  Sparse pushes
+    carry an optional strictly-increasing per-shard ``seq`` (assigned by
+    the remote stub), making ``push_rows`` idempotent exactly like
+    ``ProvenanceShard.add``: an ambiguous post-kill retry whose first
+    delivery *was* applied is skipped, never double-merged.
     """
 
-    def __init__(self, shard_id: int, num_shards: int, num_funcs: int):
+    def __init__(self, shard_id: int, num_shards: int, num_funcs: int, wal=None):
         self.shard_id = shard_id
         self.num_shards = num_shards
         self.stats = StatsTable(shard_rows(num_funcs, shard_id, num_shards))
         self.lock = threading.Lock()
         self.n_pushes = 0
+        self.last_push_seq = -1  # highest applied push_rows seq (dedup)
         # Dirty-row bookkeeping for the federation's incremental aggregate
         # refresh: every row a push touches since the last delta peek.
         self._dirty = np.zeros(self.stats.num_funcs, bool)
+        self.wal = wal
+        self._conf_funcs = num_funcs  # global F at configure time (WAL CONF)
+        if wal is not None:
+            self._wal_open(num_funcs)
+
+    # ------------------------------------------------------------ durability
+    def _wal_open(self, num_funcs: int) -> None:  # lint: ignore[lockset-mixed] — runs inside __init__ before the shard is published to any other thread
+        """Replay an existing log (bit-exact restore) or start a fresh one."""
+        from repro.fault import wal as _w  # lazy: core must not need fault
+
+        records, resumed = self.wal.load()
+        if not resumed:
+            self.wal.append_conf(self.shard_id, self.num_shards, num_funcs)
+            return
+        for rtype, payload in records:
+            if rtype == _w.CONF:
+                sid, S, F = _w.decode_conf(payload)
+                if (sid, S) != (self.shard_id, self.num_shards):
+                    raise _w.WalCorrupt(
+                        f"WAL {self.wal.path} belongs to shard {sid}/{S}, "
+                        f"not {self.shard_id}/{self.num_shards}"
+                    )
+                self.stats = StatsTable(shard_rows(F, self.shard_id, self.num_shards))
+                self._dirty = np.zeros(self.stats.num_funcs, bool)
+                self._conf_funcs = F
+            elif rtype == _w.SNAP:
+                table, n_pushes, last_seq = _w.decode_snap(payload)
+                self.stats = StatsTable(table.shape[0], table.copy())
+                self._dirty = np.zeros(self.stats.num_funcs, bool)
+                self.n_pushes = n_pushes
+                self.last_push_seq = last_seq
+            elif rtype == _w.ROWS:
+                seq, idx, rows, rows_total = _w.decode_rows(payload)
+                self._apply_rows_locked(idx, rows, rows_total)
+                if seq >= 0:
+                    self.last_push_seq = seq
+            elif rtype == _w.PUSH:
+                self._apply_push_locked(_w.decode_push(payload))
+            elif rtype == _w.GROW:
+                self._grow_locked(_w.decode_grow(payload))
+        # The front-end's incremental refresh state died with the old
+        # process: mark every live row dirty so the next delta peek re-ships
+        # them all — over-inclusive (same values rewritten) but exact.
+        self._dirty[:] = self.stats.table[:, N] > 0
 
     def _grow_locked(self, num_rows: int) -> None:  # lint: ignore[lockset-mixed] — caller holds self.lock (grow/push* take it before dispatching here)
         self.stats.grow(num_rows)
@@ -181,16 +235,38 @@ class PSShard:
             grown[: len(self._dirty)] = self._dirty
             self._dirty = grown
 
+    def _apply_push_locked(self, rows: np.ndarray) -> None:  # lint: ignore[lockset-mixed,lockset-counter] — caller holds self.lock (push / WAL replay in __init__)
+        if rows.shape[0] > self.stats.num_funcs:
+            self._grow_locked(rows.shape[0])
+        self.stats.merge_array(pad_table(rows, self.stats.num_funcs))
+        self._dirty[np.nonzero(rows[:, N] > 0)[0]] = True
+        self.n_pushes += 1
+
+    def _apply_rows_locked(  # lint: ignore[lockset-mixed,lockset-counter] — caller holds self.lock (push_rows / WAL replay in __init__)
+        self, idx: np.ndarray, rows: np.ndarray, rows_total: int
+    ) -> None:
+        if rows_total > self.stats.num_funcs:
+            self._grow_locked(rows_total)
+        table = self.stats.table
+        table[idx] = merge_moments(table[idx], rows)
+        self._dirty[idx] = True
+        self.n_pushes += 1
+
     def push(self, rows: np.ndarray) -> None:
         """Merge a (rows_s, 7) delta block (already shard-local rows)."""
         with self.lock:
-            if rows.shape[0] > self.stats.num_funcs:
-                self._grow_locked(rows.shape[0])
-            self.stats.merge_array(pad_table(rows, self.stats.num_funcs))
-            self._dirty[np.nonzero(rows[:, N] > 0)[0]] = True
-            self.n_pushes += 1
+            if self.wal is not None:
+                self.wal.append_push(rows)
+            self._apply_push_locked(rows)
+            self._maybe_compact_locked()
 
-    def push_rows(self, idx: np.ndarray, rows: np.ndarray, rows_total: int) -> None:
+    def push_rows(
+        self,
+        idx: np.ndarray,
+        rows: np.ndarray,
+        rows_total: int,
+        seq: Optional[int] = None,
+    ) -> None:
         """Merge only the delta's non-empty rows (sparse push), in place.
 
         ``idx`` are shard-local row indices into a ``rows_total``-row slice.
@@ -201,14 +277,30 @@ class PSShard:
         shard host's hot path, where the only readers are the ``ps.*``
         handlers, which take :attr:`lock` — use :meth:`peek_table_locked`
         there, never the lock-free :meth:`peek_table`.
+
+        ``seq``: strictly-increasing per-shard push sequence (the remote
+        stub assigns it).  A seq at or below the highest applied one is a
+        duplicate delivery — a replayed batch whose first delivery landed
+        before the connection died — and is skipped, keeping retries
+        exactly-once.  Logged in the WAL record so a restart restores the
+        dedup horizon along with the table.
         """
         with self.lock:
-            if rows_total > self.stats.num_funcs:
-                self._grow_locked(rows_total)
-            table = self.stats.table
-            table[idx] = merge_moments(table[idx], rows)
-            self._dirty[idx] = True
-            self.n_pushes += 1
+            if seq is not None and seq <= self.last_push_seq:
+                return  # duplicate delivery (post-kill replay): already applied
+            if self.wal is not None:
+                self.wal.append_rows(-1 if seq is None else seq, idx, rows, rows_total)
+            self._apply_rows_locked(idx, rows, rows_total)
+            if seq is not None:
+                self.last_push_seq = seq
+            self._maybe_compact_locked()
+
+    def _maybe_compact_locked(self) -> None:  # lint: ignore[lockset-mixed] — caller holds self.lock
+        if self.wal is not None and self.wal.should_compact():
+            self.wal.compact(
+                (self.shard_id, self.num_shards, self._conf_funcs),
+                self.stats.table, self.n_pushes, self.last_push_seq,
+            )
 
     def peek_table_locked(self) -> np.ndarray:
         """Copy of the table, consistent under concurrent in-place
@@ -236,11 +328,17 @@ class PSShard:
 
     def grow(self, num_rows: int) -> None:
         with self.lock:
+            if self.wal is not None and num_rows > self.stats.num_funcs:
+                self.wal.append_grow(num_rows)
             self._grow_locked(num_rows)
 
     def peek_table(self) -> np.ndarray:
         """Lock-free read of the current shard table (atomic ref load)."""
         return self.stats.table
+
+    def close(self) -> None:
+        if self.wal is not None:
+            self.wal.close()
 
 
 class FederatedPS(AnomalyFeed):
@@ -293,8 +391,11 @@ class FederatedPS(AnomalyFeed):
         aggregate_every: int = 16,
         transport: str = "local",
         endpoints=None,
+        wal_dir: Optional[str] = None,
+        fault_policy=None,
     ):
         super().__init__()
+        self._conn_lost: tuple = ()  # except () catches nothing (non-fault modes)
         if transport not in ("local", "socket"):
             raise ValueError(f"transport must be 'local' or 'socket', got {transport!r}")
         if transport == "socket":
@@ -303,8 +404,27 @@ class FederatedPS(AnomalyFeed):
             from repro.net.shards import RemotePSShard  # lazy: core must not need net
 
             num_shards = len(endpoints)
+            # wal_dir makes the federation crash-tolerant: each worker logs
+            # its applied deltas to ``wal_dir/ps_shard<k>.wal`` (write-ahead,
+            # docs/fault.md) and a killed+respawned worker replays to a
+            # bit-exact table; the stubs get a recovery policy so pushes in
+            # flight across the kill are replayed (seq-dedup'd) instead of
+            # surfacing ConnectionLost to the monitor.
+            if wal_dir is not None and fault_policy is None:
+                from repro.fault.policy import DEFAULT_POLICY
+
+                fault_policy = DEFAULT_POLICY
+            if fault_policy is not None:
+                from repro.net.framing import ConnectionLost
+
+                # Exceptions the aggregate refresh absorbs (stale-but-alive
+                # degraded mode) instead of surfacing to the monitor.
+                self._conn_lost = (ConnectionLost,)
             self.shards = [
-                RemotePSShard(ep, s, num_shards, num_funcs)
+                RemotePSShard(
+                    ep, s, num_shards, num_funcs,
+                    wal_dir=wal_dir, policy=fault_policy,
+                )
                 for s, ep in enumerate(endpoints)
             ]
         if num_shards < 1:
@@ -313,7 +433,18 @@ class FederatedPS(AnomalyFeed):
         self.num_shards = num_shards
         self._num_funcs = num_funcs
         if transport == "local":
-            self.shards = [PSShard(s, num_shards, num_funcs) for s in range(num_shards)]
+            if wal_dir is not None:
+                from repro.fault.wal import PSWal, wal_path
+
+                self.shards = [
+                    PSShard(s, num_shards, num_funcs,
+                            wal=PSWal(wal_path(wal_dir, s), reset=True))
+                    for s in range(num_shards)
+                ]
+            else:
+                self.shards = [
+                    PSShard(s, num_shards, num_funcs) for s in range(num_shards)
+                ]
         self._aggregate_every = max(int(aggregate_every), 1)
         self._size_lock = threading.Lock()  # guards _num_funcs growth
         self._count_lock = threading.Lock()  # guards n_updates / refresh decision
@@ -392,7 +523,14 @@ class FederatedPS(AnomalyFeed):
                 # start their own O(F) aggregation while this one runs.
                 self._agg_at = self.n_updates
         if refresh:
-            self._refresh_aggregate()
+            try:
+                self._refresh_aggregate()
+            except self._conn_lost:
+                # Fault-tolerant federation mid-outage: keep analyzing on a
+                # stale aggregate rather than dying with the shard.
+                # _refresh_full is already set, so the first refresh after
+                # recovery rebuilds from full peeks — exact by construction.
+                pass
         # Pad at read time: clients copy the snapshot over their global view
         # and index it by fid, so it must never have fewer rows than the
         # delta they just pushed (the cached aggregate may predate a grow).
@@ -465,9 +603,21 @@ class FederatedPS(AnomalyFeed):
                 for s, (idx, rows) in enumerate(parts):
                     if len(idx):
                         agg[idx * S + s] = rows
-            except BaseException:
+            except BaseException as exc:
                 self._refresh_full = True  # dirty state may be half-consumed
-                raise
+                if not isinstance(exc, self._conn_lost):
+                    raise
+                # Recoverable loss mid-peek: the stub already healed the
+                # connection (or recovery is one call away), so rebuild from
+                # stateless full peeks *now* rather than at the next refresh
+                # window.  A healed outage must never leave frames analyzing
+                # a stale aggregate — which push path noticed the dead socket
+                # first would otherwise decide whether the run stays
+                # bit-exact.  Still down → ConnectionLost propagates and the
+                # caller degrades to the stale aggregate as before.
+                self._agg = self._build_aggregate()
+                self._refresh_full = False
+                return
             self._agg = agg  # atomic ref swap; readers never see torn state
         finally:
             self._refresh_lock.release()

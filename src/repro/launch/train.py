@@ -52,6 +52,8 @@ def train(
     shard_endpoints: Optional[str] = None,
     export_trace: bool = False,
     viz_port: Optional[int] = None,
+    supervise: bool = False,
+    ps_wal: Optional[str] = None,
 ) -> Dict:
     cfg = configs.smoke(arch) if smoke else configs.get_config(arch)
     ctx = make_shard_ctx(cfg, None, global_batch, opts)
@@ -74,7 +76,9 @@ def train(
     if ps_transport == "socket" or provdb_transport == "socket":
         from repro.launch.shard_server import resolve_endpoints
 
-        endpoints, pool = resolve_endpoints(shard_endpoints)
+        # --supervise only governs pools this run spawns; externally-run
+        # workers bring their own supervisor (shard_server --supervise).
+        endpoints, pool = resolve_endpoints(shard_endpoints, supervise=supervise)
         if endpoints is None:
             raise ValueError(
                 "socket transport needs --shard-endpoints (host:port,... or spawn:N)"
@@ -101,6 +105,7 @@ def train(
             ps_transport=ps_transport,
             provdb_transport=provdb_transport,
             shard_endpoints=endpoints,
+            ps_wal_dir=ps_wal,
             stream_path=os.path.join(monitor_dir, "stream.jsonl") if monitor_dir else None,
             export_trace=(
                 os.path.join(monitor_dir, "trace.json")
@@ -193,6 +198,16 @@ def main():
         "local worker pool for this run (required with a socket transport)",
     )
     ap.add_argument(
+        "--supervise", action="store_true",
+        help="respawn dead shard workers (spawn:N pools only); pair with "
+        "--ps-wal so recovered PS shards replay to their pre-crash state",
+    )
+    ap.add_argument(
+        "--ps-wal", default=None, metavar="DIR",
+        help="write-ahead-log directory for PS shards (socket transport): "
+        "arms crash recovery with bit-exact table replay (docs/fault.md)",
+    )
+    ap.add_argument(
         "--export-trace", action="store_true",
         help="continuously write <monitor-dir>/trace.json (Chrome Trace "
         "Event JSON, openable in ui.perfetto.dev) during the run",
@@ -218,6 +233,8 @@ def main():
         shard_endpoints=args.shard_endpoints,
         export_trace=args.export_trace,
         viz_port=args.viz_port,
+        supervise=args.supervise,
+        ps_wal=args.ps_wal,
     )
     if args.auto_restart:
         attempts = 0

@@ -112,11 +112,13 @@ class RPCClient:
         timeout: float = 30.0,
         connect_retries: int = 40,
         retry_delay: float = 0.25,
+        retry_delay_max: float = 2.0,
     ):
         self.endpoint = (endpoint[0], int(endpoint[1]))
         self.timeout = timeout
         self.connect_retries = connect_retries
         self.retry_delay = retry_delay
+        self.retry_delay_max = retry_delay_max
         self._lock = threading.Lock()  # guards socket/gen/methods + sends + rid
         self._sock: Optional[socket.socket] = None
         self._gen = 0  # connection generation; tags pending calls
@@ -158,6 +160,18 @@ class RPCClient:
         with self._lock:
             self._connect()
 
+    @property
+    def generation(self) -> int:
+        """Connection generation: bumps on every successful (re)dial.
+
+        Fault-tolerant stubs (repro.net.shards) compare this with the
+        generation they last ``configure``d on: a mismatch means the
+        connection bounced — possibly to a blank respawned worker — while
+        their in-flight window was empty, so nothing else would have
+        noticed that a recovery reconfigure is due."""
+        with self._lock:
+            return self._gen
+
     def _method_latency(self, name: str):
         m = self._m_by_method.get(name)
         if m is None:
@@ -171,7 +185,17 @@ class RPCClient:
 
     # ------------------------------------------------------------ connection
     def _connect(self) -> None:  # lint: ignore[lockset-mixed] — caller holds _lock
-        """Dial + handshake synchronously; caller holds ``_lock``."""
+        """Dial + handshake synchronously; caller holds ``_lock``.
+
+        Between attempts the dial backs off on the shared capped-exponential
+        schedule (``repro.fault.policy``): delay k is ``min(cap, base*2**k)``
+        — a pure function of the attempt index (deterministic, no jitter).
+        A reconnect storm against a restarting server therefore decays to at
+        most one dial per client per ``retry_delay_max`` seconds, instead of
+        every client hammering at a fixed ``retry_delay`` period.
+        """
+        from repro.fault.policy import backoff_delay  # lazy: no import cycle
+
         if self._closed:
             raise ConnectionLost(f"client for {self.endpoint} is closed")
         last: Optional[Exception] = None
@@ -183,7 +207,9 @@ class RPCClient:
             except OSError as e:
                 last = e
                 if attempt + 1 < max(self.connect_retries, 1):
-                    time.sleep(self.retry_delay)
+                    time.sleep(
+                        backoff_delay(attempt, self.retry_delay, self.retry_delay_max)
+                    )
         if sock is None:
             raise ConnectionLost(
                 f"cannot connect to {self.endpoint[0]}:{self.endpoint[1]}: {last}"
@@ -281,6 +307,26 @@ class RPCClient:
         if telemetry.ENABLED:
             self._m_sendbuf.set(0)
         self._sock.sendall(buf)
+
+    def try_dial(self) -> bool:
+        """One quick dial attempt; True when connected (or already).
+
+        The degraded-mode recovery probe (repro.net.shards): a down shard
+        must cost one failed ``connect()`` per probe, never the full
+        ``connect_retries`` backoff budget the blocking paths use.
+        """
+        with self._lock:
+            if self._sock is not None:
+                return True
+            saved = self.connect_retries
+            self.connect_retries = 1
+            try:
+                self._connect()
+                return True
+            except ConnectionLost:
+                return False
+            finally:
+                self.connect_retries = saved
 
     def flush_sends(self) -> None:
         """Put every buffered fire-and-forget frame on the wire."""

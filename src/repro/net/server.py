@@ -81,6 +81,20 @@ class MethodTable:
         self._by_id: Dict[int, Tuple[str, Handler, bool]] = {}
         self._ids: Dict[str, int] = {}
         self._next_id = METHOD_RESOLVE + 1
+        self._closers: List[Callable[[], None]] = []
+
+    def register_closer(self, fn: Callable[[], None]) -> None:
+        """Run ``fn`` when the hosting server stops — services use this to
+        release state the registry otherwise keeps alive (e.g. a shard's
+        write-ahead log file handle)."""
+        self._closers.append(fn)
+
+    def close_all(self) -> None:
+        for fn in self._closers:
+            try:
+                fn()
+            except Exception:
+                pass  # teardown must release every closer it can
 
     def register(self, name: str, fn: Handler, heavy: bool = False) -> int:
         if name in self._ids:
@@ -619,6 +633,13 @@ class RPCServer(EventLoopServer):
         # setdefault are GIL-atomic; labels() dedupes children, so racing
         # threads converge on the same objects.
         self._m_by_method: Dict[str, tuple] = {}
+
+    def stop(self) -> None:
+        super().stop()
+        # Loop + idle workers are done: release service-held state that the
+        # registry otherwise keeps alive (a PS shard's WAL file handle, a
+        # provenance shard's JSONL handle).
+        self.table.close_all()
 
     def _method_metrics(self, name: str) -> tuple:
         m = self._m_by_method.get(name)

@@ -89,6 +89,8 @@ class ChimbukoMonitor:
         ps_transport: str = "local",
         provdb_transport: str = "local",
         shard_endpoints: Optional[list] = None,
+        ps_wal_dir: Optional[str] = None,
+        fault_policy=None,
         export_trace: Optional[str] = None,
         stream_path: Optional[str] = None,
         viz_serve: Optional[int] = None,
@@ -123,10 +125,15 @@ class ChimbukoMonitor:
         # worker processes at shard_endpoints — the paper's separate-process
         # PS/provenance instances — with unchanged semantics (bit-matched
         # stats, byte-matched provenance).
+        # ps_wal_dir arms crash tolerance (repro.fault): workers write-ahead
+        # log applied deltas there, stubs get a retry/replay policy, and a
+        # killed+respawned shard recovers to a bit-exact table while the
+        # monitor keeps analyzing (degraded) through the outage.
         if ps_transport == "socket":
             self.ps = FederatedPS(
                 num_funcs, aggregate_every=ps_aggregate_every,
                 transport="socket", endpoints=shard_endpoints,
+                wal_dir=ps_wal_dir, fault_policy=fault_policy,
             )
         elif ps_shards > 1:
             self.ps = FederatedPS(
@@ -151,6 +158,7 @@ class ChimbukoMonitor:
                 path=prov_path, registry=self.registry, k_neighbors=k_neighbors,
                 run_info=run_info, append=prov_append,
                 transport="socket", endpoints=shard_endpoints,
+                fault_policy=fault_policy,
             )
         elif provdb_shards > 1:
             self.provdb = FederatedProvenanceDB(
@@ -334,6 +342,9 @@ class ChimbukoMonitor:
         if self.viz_gateway is not None:
             host, port = self.viz_gateway.endpoint
             out["viz_endpoint"] = f"http://{host}:{port}"
+        from repro.fault.health import get_health  # local: cheap, avoids cycle
+
+        out["health"] = get_health().snapshot()
         return out
 
     def flush_ps(self) -> None:

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.lint import runtime as san
 from repro.net.server import EventLoopConn, EventLoopServer
+from repro.fault.health import get_health
 from repro.telemetry import registry as telemetry
 from repro.telemetry.exposition import CONTENT_TYPE as _METRICS_CONTENT_TYPE
 from repro.telemetry.exposition import render_exposition
@@ -230,6 +231,10 @@ class VizGateway(EventLoopServer):
         payload: Dict[str, Any] = {
             "type": "frame", "rank": int(rank), "step": int(step),
             "n_anomalies": int(n_anomalies), "severity": int(severity),
+            # Fleet health (repro.fault): ok flag + degraded endpoints +
+            # spooled write depth, so dashboards show an outage-in-progress
+            # (and the recovery) live instead of on the next scrape.
+            "health": get_health().snapshot(),
         }
         if telemetry.ENABLED:
             payload["metrics"] = self.metrics_summary()

@@ -568,9 +568,11 @@ def test_ws_handshake_hello_and_broadcast(served):
     (msg,) = _recv_msgs(s, dec, 1)
     payload = json.loads(msg.data)
     metrics = payload.pop("metrics")  # self-observability rider (PR 8)
+    health = payload.pop("health")  # fault-tolerance rider (PR 9)
     assert payload == {
         "type": "frame", "rank": 2, "step": 17, "n_anomalies": 3,
         "severity": 5}
+    assert health["ok"] is True and health["degraded"] == []
     assert metrics["viewers"] == 1
     assert {"frames", "broadcasts", "backpressure_pauses",
             "viewers_dropped"} <= set(metrics)
@@ -886,3 +888,37 @@ def test_monitor_viz_serve_wiring(tmp_path):
     assert monitor.viz_gateway is None
     with pytest.raises(OSError):
         socket.create_connection(gw.endpoint, timeout=1)
+
+
+def test_viewer_killed_mid_chunked_trace_stream(tmp_path):
+    """A viewer that RSTs away in the middle of a chunked /trace download
+    (repro.fault satellite): the producer thread — possibly parked on the
+    high-water backpressure wait — must unblock, the connection must be
+    reaped, and the loop must keep serving, including a byte-complete
+    /trace retry."""
+    monitor = _run_monitor(str(tmp_path), n_ranks=4, steps=40)
+    gw = VizGateway(monitor, high_water=8 << 10, low_water=2 << 10).start()
+    try:
+        want = _get(gw.endpoint, "/trace")[2]  # complete reference body
+        assert len(want) > 2 * (8 << 10)  # several high-water windows deep
+        victim = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        victim.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4 << 10)
+        victim.connect(gw.endpoint)
+        victim.sendall(b"GET /trace HTTP/1.1\r\nHost: t\r\n\r\n")
+        status, hdrs, rest = _read_head(victim)
+        assert status == 200
+        assert hdrs.get("transfer-encoding") == "chunked"
+        if not rest:
+            rest = victim.recv(1024)
+        assert rest  # bytes were flowing when we pull the plug
+        victim.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                          struct.pack("ii", 1, 0))
+        victim.close()  # RST mid-body, not FIN
+        # the loop stays responsive and a retry streams every byte
+        st, _h, body = _get(gw.endpoint, "/trace")
+        assert st == 200 and body == want
+        st2, _h2, _b2 = _get(gw.endpoint, "/dashboard")
+        assert st2 == 200
+    finally:
+        gw.stop()
+        monitor.close()
