@@ -441,6 +441,116 @@ def run_wal_overhead(
     }
 
 
+def _drive_traced(ps, deltas) -> Tuple[float, List[float]]:
+    """`_drive` with every update under a per-frame trace-root context —
+    what a ``trace_spans=True`` monitor does around its ingest.  With
+    ``sample_every=1`` every push stamps a stable trace context on its
+    frame and records client + server + apply spans, the worst-case
+    per-call tracing work."""
+    from repro.telemetry import spans
+
+    n_ranks = len(deltas)
+    barrier = threading.Barrier(n_ranks + 1)
+    lat: List[List[float]] = [[] for _ in range(n_ranks)]
+
+    def worker(rank: int) -> None:
+        barrier.wait()
+        rec = lat[rank].append
+        for step, d in enumerate(deltas[rank]):
+            c0 = time.perf_counter()
+            with spans.use(spans.root_context(rank, step, sample_every=1)):
+                ps.update_and_fetch(rank, step, d)
+            rec((time.perf_counter() - c0) * 1e6)
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(n_ranks)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    return dt, [x for per_rank in lat for x in per_rank]
+
+
+def run_tracing_overhead(
+    n_ranks: int = 8,
+    frames: int = 40,
+    num_funcs: int = 4096,
+    working_set: int = 512,
+    repeats: int = 3,
+) -> Dict:
+    """A/B the distributed-tracing cost on the socket PS push path.
+
+    Same deltas through identical S=1 worker pools with and without
+    ``REPRO_SPANS``: the traced mode derives a per-frame root context,
+    stamps every push frame's envelope with a stable trace context, and
+    records client + server + apply spans into both processes' flight
+    recorders — the whole per-call cost of ``repro.telemetry.spans``
+    (sample_every=1, the worst case: tail sampling gates only the
+    export, never the recording).  Full runs gate the delta at ≤5%,
+    the bar for leaving tracing arm-able on production runs."""
+    from repro.telemetry import spans
+    from repro.telemetry.ring import get_ring
+
+    deltas = _make_deltas(n_ranks, frames, num_funcs, working_set)
+    times: Dict[str, float] = {}
+    snaps: Dict[str, np.ndarray] = {}
+    prev_env = os.environ.get("REPRO_SPANS")
+    prev_enabled = spans.ENABLED
+    try:
+        for mode in ("off", "on"):
+            on = mode == "on"
+            if on:
+                # Spawned shard workers read REPRO_SPANS at import: the
+                # env var must be set before the pool spawns for the
+                # traced mode to pay the *server-side* recording too.
+                os.environ["REPRO_SPANS"] = "1"
+            else:
+                os.environ.pop("REPRO_SPANS", None)
+            spans.set_enabled(on)
+            best: Optional[float] = None
+            for _rep in range(max(repeats, 1)):
+                telemetry.get_registry().reset()
+                get_ring().clear()
+                pool = ShardServerPool(1, kind="ps")
+                try:
+                    fed = FederatedPS(
+                        num_funcs, transport="socket", endpoints=pool.endpoints
+                    )
+                    drive = _drive_traced if on else _drive
+                    dt, _ = drive(fed, deltas)
+                    t0 = time.perf_counter()
+                    fed.drain()
+                    dt += time.perf_counter() - t0
+                    snaps[mode] = fed.snapshot().table
+                    fed.close()
+                finally:
+                    pool.stop()
+                best = dt if best is None else min(best, dt)
+            times[mode] = best
+    finally:
+        spans.set_enabled(prev_enabled)
+        if prev_env is None:
+            os.environ.pop("REPRO_SPANS", None)
+        else:
+            os.environ["REPRO_SPANS"] = prev_env
+        get_ring().clear()
+    # The trace context is frame metadata: it must not perturb the math.
+    assert np.allclose(snaps["on"], snaps["off"], rtol=1e-6, atol=1e-6)
+    overhead_pct = (times["on"] / times["off"] - 1.0) * 100.0
+    return {
+        "config": "tracing_overhead",
+        "section": "overhead",
+        "transport": "socket",
+        "shards": 1,
+        "time_tracing_on_s": times["on"],
+        "time_tracing_off_s": times["off"],
+        "total_updates": n_ranks * frames,
+        "overhead_pct": overhead_pct,
+    }
+
+
 def _curve(rows: List[Dict], section: str, transport: str, metric: str) -> Dict[int, float]:
     return {
         r["shards"]: r[metric]
@@ -518,12 +628,16 @@ def main(argv=()):
             n_ranks=4, frames=10, num_funcs=1024, working_set=128, repeats=1,
             shards=1,
         )
+        tracing_row = run_tracing_overhead(
+            n_ranks=4, frames=10, num_funcs=1024, working_set=128, repeats=1
+        )
     else:
         ps_rows = run_ps()
         prov_rows = run_prov()
         overhead_row = run_overhead()
         wal_row = run_wal_overhead()
-    rows = ps_rows + prov_rows + [overhead_row, wal_row]
+        tracing_row = run_tracing_overhead()
+    rows = ps_rows + prov_rows + [overhead_row, wal_row, tracing_row]
     for r in ps_rows:
         print(
             f"net_federation/{r['config']},{r['time_s'] * 1e6 / r['total_updates']:.2f},"
@@ -548,6 +662,12 @@ def main(argv=()):
         f"overhead_pct={wal_row['overhead_pct']:.2f};"
         f"on_s={wal_row['time_wal_on_s']:.3f};"
         f"off_s={wal_row['time_wal_off_s']:.3f}"
+    )
+    print(
+        f"net_federation/tracing_overhead,,"
+        f"overhead_pct={tracing_row['overhead_pct']:.2f};"
+        f"on_s={tracing_row['time_tracing_on_s']:.3f};"
+        f"off_s={tracing_row['time_tracing_off_s']:.3f}"
     )
     speedups = {}
     for section, metric in (("ps", "updates_per_s"), ("prov", "docs_per_s")):
@@ -601,10 +721,24 @@ def main(argv=()):
             f"{'PASS' if wal_ok else 'FAIL'}"
         )
         ok = ok and wal_ok
+        # Tracing must stay arm-able on production runs: ≤5% on the
+        # socket PS push path with every frame traced (sample_every=1).
+        # Full runs only — smoke A/Bs are dominated by pool spawn noise.
+        tracing_ok = tracing_row["overhead_pct"] <= 5.0
+        print(
+            "net_federation/acceptance_tracing_overhead_5pct,,"
+            f"{'PASS' if tracing_ok else 'FAIL'}"
+        )
+        ok = ok and tracing_ok
     if args.json:
+        from repro.telemetry.buildinfo import build_info
+
         doc = {
             "bench": "net_federation",
             "smoke": bool(args.smoke),
+            # Same labels the repro_build_info gauge exports: every row in
+            # the trajectory file is attributable to the build that ran it.
+            "build": build_info(),
             "host": {
                 "platform": platform.platform(),
                 "python": sys.version.split()[0],

@@ -187,17 +187,20 @@ class ChromeTraceWriter:
         self._emit(evt)
 
     # Flow events (ph "s"/"f"): Perfetto draws an arrow from the start to
-    # the finish — how a SEND on one rank points at its RECV on another.
+    # the finish — how a SEND on one rank points at its RECV on another,
+    # or (cat "rpc") a client span at its server span on another process.
     def flow_start(self, pid: int, tid: int, name: str, ts: int, flow_id: int,
-                   args: Optional[Dict[str, Any]] = None) -> None:
-        self._emit({"ph": "s", "cat": "comm", "id": int(flow_id), "pid": pid,
+                   args: Optional[Dict[str, Any]] = None,
+                   cat: str = "comm") -> None:
+        self._emit({"ph": "s", "cat": cat, "id": int(flow_id), "pid": pid,
                     "tid": tid, "name": name, "ts": int(ts), "args": args or {}})
 
     def flow_finish(self, pid: int, tid: int, name: str, ts: int, flow_id: int,
-                    args: Optional[Dict[str, Any]] = None) -> None:
+                    args: Optional[Dict[str, Any]] = None,
+                    cat: str = "comm") -> None:
         # bp:"e" binds the finish to the enclosing slice (the modern
         # next-slice semantics confuse Perfetto when the finish is bare).
-        self._emit({"ph": "f", "bp": "e", "cat": "comm", "id": int(flow_id),
+        self._emit({"ph": "f", "bp": "e", "cat": cat, "id": int(flow_id),
                     "pid": pid, "tid": tid, "name": name, "ts": int(ts),
                     "args": args or {}})
 
@@ -315,6 +318,125 @@ class ChromeTraceWriter:
         self._out.flush()
         if self._own:
             self._out.close()
+
+
+# ----------------------------------------------------------------- RPC spans
+# Span tracks land in their own pid block, above the self-trace group
+# (SELF_TRACE_PID = 1<<20) and far above workload ranks.
+SPAN_PID_BASE = 1 << 21
+
+# Only spans that are both logically derived (STABLE) and tail-sampled
+# (SAMPLED) are exportable — see repro/telemetry/spans.py flag bits.
+_SPAN_EXPORT_FLAGS = 3
+
+
+def _hexid(v: int) -> str:
+    return format(int(v), "016x")
+
+
+def render_spans(
+    writer: ChromeTraceWriter,
+    spans_by_proc: Dict[str, Sequence[Dict[str, Any]]],
+) -> int:
+    """Render federated RPC spans as cross-process trees + flow arrows.
+
+    ``spans_by_proc`` maps a process label (``"monitor"``,
+    ``"shard:host:port"``) to that process's collected span dicts.  Output
+    is a pure function of the *logical* span set: spans are deduplicated by
+    ``(trace, span)`` id (crash replay makes duplicates routine), filtered
+    to STABLE∧SAMPLED, and drawn on a logical clock — each trace is an
+    Euler tour assigning one tick per span entry/exit, traces ordered by
+    their root's ``ord`` (step, rank).  Real timings never enter the
+    rendering (they differ run to run; the ``/spans`` endpoint serves
+    them), so a quiesced run's export is byte-identical across repeats.
+
+    Each span becomes an ``X`` event (``cat: "span"``) on its process's
+    track, args carrying the hex trace/span/parent ids and the span kind.
+    Every client span with a matched server/worker child gets a ``cat:
+    "rpc"`` flow arrow (``s`` at the client entry tick, ``f`` at the server
+    entry tick; the child's entry tick is strictly inside the parent's, so
+    the pair always validates).  Returns the number of spans rendered.
+    """
+    by_key: Dict[Tuple[int, int], Tuple[Dict[str, Any], str]] = {}
+    for proc in sorted(spans_by_proc):
+        for span in spans_by_proc[proc]:
+            if (span.get("flags", 0) & _SPAN_EXPORT_FLAGS) != _SPAN_EXPORT_FLAGS:
+                continue
+            by_key.setdefault((span["trace"], span["span"]), (span, proc))
+    if not by_key:
+        return 0
+    procs = sorted({proc for _s, proc in by_key.values()})
+    pid_of = {p: SPAN_PID_BASE + i for i, p in enumerate(procs)}
+    for p in procs:
+        writer.set_process(pid_of[p], f"spans:{p}", sort_index=pid_of[p])
+    traces: Dict[int, Dict[int, Tuple[Dict[str, Any], str]]] = {}
+    for (trace, sid), member in by_key.items():
+        traces.setdefault(trace, {})[sid] = member
+
+    def _trace_key(item):
+        trace, members = item
+        ords = [tuple(s["ord"]) for s, _p in members.values() if "ord" in s]
+        # Traces with a frame root sort by (step, rank); stragglers after.
+        return (0, min(ords), trace) if ords else (1, (), trace)
+
+    tick = 0
+    rendered = 0
+    for trace, members in sorted(traces.items(), key=_trace_key):
+        children: Dict[int, List[int]] = {}
+        roots: List[int] = []
+        for sid, (span, _proc) in members.items():
+            parent = int(span.get("parent", 0))
+            if parent and parent in members:
+                children.setdefault(parent, []).append(sid)
+            else:
+                roots.append(sid)
+
+        def _sib_key(sid, _m=members):
+            span, _p = _m[sid]
+            return (0 if "ord" in span else 1, span["name"], sid)
+
+        entry_tick: Dict[int, int] = {}
+        exit_tick: Dict[int, int] = {}
+        stack = [(sid, False) for sid in sorted(roots, key=_sib_key, reverse=True)]
+        while stack:
+            sid, leaving = stack.pop()
+            if leaving:
+                exit_tick[sid] = tick
+                tick += 1
+                continue
+            entry_tick[sid] = tick
+            tick += 1
+            stack.append((sid, True))
+            for c in sorted(children.get(sid, ()), key=_sib_key, reverse=True):
+                stack.append((c, False))
+        for sid in sorted(entry_tick, key=entry_tick.get):
+            span, proc = members[sid]
+            args = {
+                "kind": span["kind"],
+                "parent": _hexid(span.get("parent", 0)),
+                "span": _hexid(sid),
+                "trace": _hexid(trace),
+            }
+            if span.get("err"):
+                args["err"] = 1
+            writer.complete(
+                pid_of[proc], 0, span["name"], entry_tick[sid],
+                exit_tick[sid] - entry_tick[sid], args, cat="span",
+            )
+            rendered += 1
+            if span["kind"] != "client":
+                continue
+            for c in sorted(children.get(sid, ()), key=_sib_key):
+                cspan, cproc = members[c]
+                if cspan["kind"] in ("server", "worker"):
+                    writer.flow_start(
+                        pid_of[proc], 0, "rpc", entry_tick[sid], sid, cat="rpc"
+                    )
+                    writer.flow_finish(
+                        pid_of[cproc], 0, "rpc", entry_tick[c], sid, cat="rpc"
+                    )
+                    break
+    return rendered
 
 
 # --------------------------------------------------------------------- checks

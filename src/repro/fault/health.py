@@ -11,7 +11,7 @@ board sits on the push hot path only as a set lookup.
 from __future__ import annotations
 
 import threading
-from typing import Dict, List
+from typing import Callable, Dict, List
 
 from ..telemetry import registry as telemetry
 
@@ -24,6 +24,7 @@ class HealthBoard:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._degraded: Dict[str, int] = {}  # endpoint -> spooled entries
+        self._listeners: List[Callable[[str, str], None]] = []
         reg = telemetry.get_registry()
         self._m_degraded = reg.gauge(
             "repro_fault_degraded_endpoints",
@@ -45,8 +46,11 @@ class HealthBoard:
     # ------------------------------------------------------------- mutation
     def mark_degraded(self, endpoint: str, spooled: int = 0) -> None:
         with self._lock:
+            transition = endpoint not in self._degraded
             self._degraded[endpoint] = int(spooled)
             self._publish_locked()
+        if transition:
+            self._notify("degraded", endpoint)
 
     def mark_recovered(self, endpoint: str, replayed: int = 0) -> None:
         with self._lock:
@@ -54,8 +58,23 @@ class HealthBoard:
             self._publish_locked()
         if was is not None:
             self._m_recoveries.inc()
+            self._notify("recovered", endpoint)
         if replayed:
             self._m_replayed.inc(replayed)
+
+    # ------------------------------------------------------------ listeners
+    def add_listener(self, fn: Callable[[str, str], None]) -> None:
+        """Register ``fn(event, endpoint)`` for degraded/recovered
+        transitions (the spans flight recorder dumps on these).  Called
+        outside the board's lock, on the thread that flipped the state."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify(self, event: str, endpoint: str) -> None:
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            fn(event, endpoint)
 
     def _publish_locked(self) -> None:  # lint: ignore[lockset-mixed] — caller holds self._lock
         self._m_degraded.set(len(self._degraded))

@@ -54,7 +54,16 @@ def train(
     viz_port: Optional[int] = None,
     supervise: bool = False,
     ps_wal: Optional[str] = None,
+    trace_spans: bool = False,
 ) -> Dict:
+    # Arm distributed request tracing before anything spawns: shard worker
+    # processes read REPRO_SPANS at import, so the env var must be set
+    # before the pool forks for shard-side spans to record.
+    if trace_spans:
+        os.environ["REPRO_SPANS"] = "1"
+        from repro.telemetry import spans as _spans
+
+        _spans.set_enabled(True)
     cfg = configs.smoke(arch) if smoke else configs.get_config(arch)
     ctx = make_shard_ctx(cfg, None, global_batch, opts)
     step_fn = jax.jit(build_train_step(cfg, ctx, opts), donate_argnums=(0,))
@@ -106,6 +115,7 @@ def train(
             provdb_transport=provdb_transport,
             shard_endpoints=endpoints,
             ps_wal_dir=ps_wal,
+            trace_spans=trace_spans or None,
             stream_path=os.path.join(monitor_dir, "stream.jsonl") if monitor_dir else None,
             export_trace=(
                 os.path.join(monitor_dir, "trace.json")
@@ -123,6 +133,11 @@ def train(
                 f"(ws://{host}:{port}/ws)",
                 f"[endpoints] metrics  http://{host}:{port}/metrics",
             ]
+            if trace_spans:
+                banner.append(
+                    f"[endpoints] spans    http://{host}:{port}/spans"
+                    " (?dump=1 freezes the flight recorders)"
+                )
             for i, (sh, sp) in enumerate(endpoints or ()):
                 banner.append(f"[endpoints] shard{i}   {sh}:{sp} (metrics.snapshot)")
             print("\n".join(banner), flush=True)
@@ -208,6 +223,12 @@ def main():
         "arms crash recovery with bit-exact table replay (docs/fault.md)",
     )
     ap.add_argument(
+        "--trace-spans", action="store_true",
+        help="distributed request tracing: W3C-style trace context on every "
+        "RPC frame, per-process span flight recorders (federated at /spans), "
+        "and cross-process span trees + flow arrows in the trace export",
+    )
+    ap.add_argument(
         "--export-trace", action="store_true",
         help="continuously write <monitor-dir>/trace.json (Chrome Trace "
         "Event JSON, openable in ui.perfetto.dev) during the run",
@@ -235,6 +256,7 @@ def main():
         viz_port=args.viz_port,
         supervise=args.supervise,
         ps_wal=args.ps_wal,
+        trace_spans=args.trace_spans,
     )
     if args.auto_restart:
         attempts = 0

@@ -43,6 +43,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..telemetry import registry as telemetry
+from ..telemetry import spans
 from .framing import (
     ERROR,
     METHOD_RESOLVE,
@@ -255,6 +256,7 @@ class RPCClient:
         arrays: Sequence[np.ndarray],
         name: str,
         buffered: bool = False,
+        tc: Optional[spans.WireSpan] = None,
     ) -> concurrent.futures.Future:
         """Frame + send (or buffer) one request; caller holds ``_lock``."""
         fut: concurrent.futures.Future = concurrent.futures.Future()
@@ -269,7 +271,27 @@ class RPCClient:
                 rid = rid % 0xFFFFFFFF + 1
             self._next_rid = rid % 0xFFFFFFFF + 1
             self._pending[rid] = (self._gen, name, fut)
-        frame = encode_frame(method_id, REQUEST, rid, env, arrays)
+        # Trace-context injection: an explicit WireSpan (the fault-tolerant
+        # stubs pass one with a replay-stable id) wins; otherwise derive the
+        # default per-call span from (endpoint, generation, request id).
+        if tc is None and spans.ENABLED:
+            tc = spans.derive_call_context(self._telemetry_endpoint, self._gen, rid)
+        frame = encode_frame(
+            method_id, REQUEST, rid, env, arrays,
+            tc.tc() if tc is not None else None,
+        )
+        if tc is not None:
+            t0_us = spans.now_us()
+
+            def _record_client_span(f, _tc=tc, _t0=t0_us, _name=name):
+                err = f.cancelled() or f.exception() is not None
+                spans.record(
+                    _tc.trace_id, _tc.span_id, _tc.parent_id,
+                    "rpc.client:" + _name, "client", _tc.flags,
+                    _t0, spans.now_us() - _t0, err=err,
+                )
+
+            fut.add_done_callback(_record_client_span)
         if telemetry.ENABLED:
             latency = self._method_latency(name)
             t0_ns = time.perf_counter_ns()
@@ -403,6 +425,7 @@ class RPCClient:
         env: Optional[dict] = None,
         arrays: Sequence[np.ndarray] = (),
         buffered: bool = False,
+        tc: Optional[spans.WireSpan] = None,
     ) -> concurrent.futures.Future:
         """Pipeline one request; returns a future of ``(env, arrays)``.
 
@@ -410,6 +433,10 @@ class RPCClient:
         (fire-and-forget hot path); it reaches the wire when the buffer
         fills, before the next unbuffered send, or on :meth:`flush_sends` —
         callers waiting such a future should flush first (``wait`` does).
+
+        ``tc`` pins the frame's trace context (replay-stable write spans);
+        by default the ambient context, when armed, is injected with a
+        per-call derived span id.
         """
         with self._lock:
             if self._sock is None:
@@ -420,7 +447,9 @@ class RPCClient:
                 raise RemoteError(
                     name, "KeyError", f"server has no method {name!r}"
                 ) from None
-            return self._send_locked(mid, env or {}, arrays, name=name, buffered=buffered)
+            return self._send_locked(
+                mid, env or {}, arrays, name=name, buffered=buffered, tc=tc
+            )
 
     def call(
         self,

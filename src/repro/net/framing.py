@@ -17,6 +17,14 @@ The envelope is ``{"env": {...}, "arrays": [{"dtype": "<f8", "shape": [...]},
 one ``json.dumps`` of a tiny dict plus a memcpy, never a float→text→float
 round-trip (which would break the federation's bit-match guarantee).
 
+Distributed-tracing context (``repro.telemetry.spans``) rides as an
+*optional* third top-level envelope key ``"tc": [trace_id, span_id,
+flags]`` (three non-negative ints).  The extension is version-tolerant in
+both directions: a decoder that predates it reads ``env``/``arrays`` via
+``.get`` and counts only declared arrays, so the extra key is ignored; a
+frame without the key decodes with ``tc=None``.  Frames encoded with
+``tc=None`` are byte-identical to the pre-extension encoding.
+
 :class:`FrameDecoder` is an incremental parser: feed it whatever ``recv``
 returned — split reads, coalesced frames, or both — and it yields every
 complete frame while buffering the remainder.  A stream that ends mid-frame
@@ -28,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
-from typing import Any, Dict, Iterable, List, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -86,10 +94,16 @@ class Frame:
     request_id: int
     env: Dict[str, Any]
     arrays: Tuple[np.ndarray, ...]
+    # Trace context: (trace_id, span_id, flags) or None (see module doc).
+    tc: Optional[Tuple[int, int, int]] = None
 
 
-def pack_payload(env: Dict[str, Any], arrays: Sequence[np.ndarray] = ()) -> bytes:
-    if not env and not arrays:
+def pack_payload(
+    env: Dict[str, Any],
+    arrays: Sequence[np.ndarray] = (),
+    tc: Optional[Sequence[int]] = None,
+) -> bytes:
+    if not env and not arrays and tc is None:
         return b""
     specs = []
     blobs = []
@@ -97,15 +111,18 @@ def pack_payload(env: Dict[str, Any], arrays: Sequence[np.ndarray] = ()) -> byte
         a = np.ascontiguousarray(a)
         specs.append({"dtype": a.dtype.str, "shape": list(a.shape)})
         blobs.append(a.tobytes())
-    envelope = json.dumps(
-        {"env": env, "arrays": specs}, separators=(",", ":")
-    ).encode()
+    doc: Dict[str, Any] = {"env": env, "arrays": specs}
+    if tc is not None:
+        doc["tc"] = [int(x) for x in tc]
+    envelope = json.dumps(doc, separators=(",", ":")).encode()
     return b"".join([ENVLEN.pack(len(envelope)), envelope] + blobs)
 
 
-def unpack_payload(payload: bytes) -> Tuple[Dict[str, Any], Tuple[np.ndarray, ...]]:
+def unpack_payload(
+    payload: bytes,
+) -> Tuple[Dict[str, Any], Tuple[np.ndarray, ...], Optional[Tuple[int, int, int]]]:
     if not payload:
-        return {}, ()
+        return {}, (), None
     if len(payload) < ENVLEN.size:
         raise FramingError(f"payload too short for envelope length: {len(payload)}")
     (elen,) = ENVLEN.unpack_from(payload)
@@ -141,7 +158,15 @@ def unpack_payload(payload: bytes) -> Tuple[Dict[str, Any], Tuple[np.ndarray, ..
         off += nbytes
     if off != len(payload):
         raise FramingError(f"{len(payload) - off} trailing bytes in payload")
-    return envelope.get("env", {}), tuple(arrays)
+    raw_tc = envelope.get("tc")
+    tc: Optional[Tuple[int, int, int]] = None
+    if raw_tc is not None:
+        try:
+            trace_id, span_id, flags = (int(x) for x in raw_tc)
+        except (TypeError, ValueError) as e:
+            raise FramingError(f"bad trace context {raw_tc!r}: {e}") from e
+        tc = (trace_id, span_id, flags)
+    return envelope.get("env", {}), tuple(arrays), tc
 
 
 def encode_frame(
@@ -150,8 +175,9 @@ def encode_frame(
     request_id: int,
     env: Dict[str, Any],
     arrays: Sequence[np.ndarray] = (),
+    tc: Optional[Sequence[int]] = None,
 ) -> bytes:
-    payload = pack_payload(env, arrays)
+    payload = pack_payload(env, arrays, tc)
     if len(payload) > MAX_PAYLOAD:
         raise FramingError(f"payload of {len(payload)} bytes exceeds MAX_PAYLOAD")
     return HEADER.pack(MAGIC, method_id, kind, request_id, len(payload)) + payload
@@ -180,8 +206,8 @@ class FrameDecoder:
                 break
             payload = bytes(self._buf[HEADER.size : HEADER.size + plen])
             del self._buf[: HEADER.size + plen]
-            env, arrays = unpack_payload(payload)
-            frames.append(Frame(method_id, kind, request_id, env, arrays))
+            env, arrays, tc = unpack_payload(payload)
+            frames.append(Frame(method_id, kind, request_id, env, arrays, tc))
         return frames
 
     @property

@@ -53,6 +53,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from ..lint import runtime as san
 from ..telemetry import registry as telemetry
+from ..telemetry import spans
 from ..telemetry.selftrace import get_self_tracer
 from .framing import (
     ERROR,
@@ -115,7 +116,31 @@ class MethodTable:
             raise KeyError(f"unknown method id {method_id}") from None
 
 
-def _run_method(name: str, fn: Handler, frame: Frame) -> Optional[bytes]:
+def _run_traced(name: str, fn: Handler, frame: Frame, kind: str):
+    """Execute a handler under the frame's trace context: the server span
+    is a deterministic child of the client span that carried the context,
+    and the context is ambient while the handler runs so handler-internal
+    spans (PS apply, prov ingest) become its children."""
+    ctx = spans.server_context(frame.tc)
+    t0 = spans.now_us()
+    err = False
+    try:
+        with spans.use(ctx):
+            return fn(frame.env, frame.arrays)
+    except BaseException:
+        err = True
+        raise
+    finally:
+        spans.record(
+            ctx.trace_id, ctx.span_id, frame.tc[1],
+            "rpc.server:" + name, kind, ctx.flags,
+            t0, spans.now_us() - t0, err=err,
+        )
+
+
+def _run_method(
+    name: str, fn: Handler, frame: Frame, kind: str = "server"
+) -> Optional[bytes]:
     """Execute one handler; return the reply frame bytes.
 
     ``None`` means the reply itself could not be framed (e.g. over-size
@@ -123,7 +148,10 @@ def _run_method(name: str, fn: Handler, frame: Frame) -> Optional[bytes]:
     response would desynchronize the client's request-id bookkeeping.
     """
     try:
-        out = fn(frame.env, frame.arrays)
+        if spans.ENABLED and frame.tc is not None:
+            out = _run_traced(name, fn, frame, kind)
+        else:
+            out = fn(frame.env, frame.arrays)
         env, arrays = out if out is not None else ({}, ())
         return encode_frame(frame.method_id, RESPONSE, frame.request_id, env, arrays)
     except Exception as e:  # noqa: BLE001 - every handler error goes on the wire
@@ -726,7 +754,7 @@ class RPCServer(EventLoopServer):
             san.assert_worker_thread(self)
         if telemetry.ENABLED:
             t0 = time.perf_counter_ns()
-            reply = _run_method(name, fn, frame)
+            reply = _run_method(name, fn, frame, kind="worker")
             self._observe_rpc(name, t0, reply)
             if self._selftrace.enabled:
                 self._selftrace.record(
@@ -734,7 +762,7 @@ class RPCServer(EventLoopServer):
                     (time.perf_counter_ns() - t0) // 1000,
                 )
         else:
-            reply = _run_method(name, fn, frame)
+            reply = _run_method(name, fn, frame, kind="worker")
         self._post(lambda: self._complete_heavy(conn, reply))
 
     def _complete_heavy(self, conn: _RPCConn, reply: Optional[bytes]) -> None:

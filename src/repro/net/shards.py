@@ -55,6 +55,7 @@ from repro.core.provenance import ProvenanceShard
 from repro.core.ps import PSShard
 from repro.fault.health import get_health
 from repro.fault.policy import RetryPolicy, backoff_delay
+from repro.telemetry import spans
 
 from .client import RPCClient
 from .framing import ConnectionLost, RemoteError, RPCError
@@ -131,12 +132,16 @@ class PSShardService:
         # replayed batch whose first delivery was applied is skipped.
         shard: PSShard = _require(self._shard, "ps")
         seq = env.get("seq")
-        shard.push_rows(
-            np.asarray(arrays[0], dtype=np.int64),
-            np.asarray(arrays[1], dtype=np.float64),
-            int(env["rows_total"]),
-            seq=None if seq is None else int(seq),
-        )
+        # The apply span nests under the server span _run_traced armed (a
+        # no-op otherwise), so the PS merge shows up as its own region in
+        # the cross-process trace tree.
+        with spans.span("ps.apply"):
+            shard.push_rows(
+                np.asarray(arrays[0], dtype=np.int64),
+                np.asarray(arrays[1], dtype=np.float64),
+                int(env["rows_total"]),
+                seq=None if seq is None else int(seq),
+            )
         return {}, ()
 
     def _grow(self, env, arrays):
@@ -251,16 +256,17 @@ class ProvenanceShardService:
         server applying it and the client seeing the response) never
         duplicates a doc or a JSONL line.
         """
-        with self._lock:
-            shard: ProvenanceShard = _require(self._shard, "prov")
-            write = bool(env.get("write", True))
-            for doc, seq in zip(env["docs"], env["seqs"]):
-                shard.add(doc, int(seq), write=write)
-            if self._durable:
-                # Durable ack: the response must imply OS-visible bytes.
-                # One small buffered-file flush per *batch*, same cost
-                # class as the inline writes above.
-                shard.flush()
+        with spans.span("prov.ingest"):
+            with self._lock:
+                shard: ProvenanceShard = _require(self._shard, "prov")
+                write = bool(env.get("write", True))
+                for doc, seq in zip(env["docs"], env["seqs"]):
+                    shard.add(doc, int(seq), write=write)
+                if self._durable:
+                    # Durable ack: the response must imply OS-visible bytes.
+                    # One small buffered-file flush per *batch*, same cost
+                    # class as the inline writes above.
+                    shard.flush()
         return {"n": len(env["docs"])}, ()
 
     def _query(self, env, arrays):
@@ -315,6 +321,27 @@ def _metrics_snapshot(env, arrays):
     return {"snapshot": get_registry().snapshot()}, ()
 
 
+def _spans_dump(env, arrays):
+    """Reserved ``spans.dump`` verb: this process's span flight recorder.
+
+    With ``dump`` set the ring is frozen into the archive first (the
+    on-demand flight-recorder trigger); either way the reply carries the
+    deduplicated archive+ring view, the recent trigger log, and the ring
+    stats.  Spans federate like metrics do — ids are deterministic, so
+    the front-end's merge is order-independent.
+    """
+    from ..telemetry.ring import get_ring
+
+    ring = get_ring()
+    if env.get("dump"):
+        ring.dump(str(env.get("reason", "rpc:spans.dump")))
+    return {
+        "spans": ring.collect(),
+        "triggers": ring.triggers(),
+        "stats": ring.stats(),
+    }, ()
+
+
 def build_shard_table(kind: str = "both") -> MethodTable:
     """Method table for one shard-host worker: ``ps``, ``prov``, or ``both``."""
     if kind not in ("ps", "prov", "both"):
@@ -328,6 +355,7 @@ def build_shard_table(kind: str = "both") -> MethodTable:
     # whole registry, so it runs heavy (off the event loop) like the other
     # bulk reads.
     table.register("metrics.snapshot", _metrics_snapshot, heavy=True)
+    table.register("spans.dump", _spans_dump, heavy=True)
     return table
 
 
@@ -730,9 +758,17 @@ class RemotePSShard:
         rows = np.ascontiguousarray(rows)
         env: Dict[str, Any] = {"rows_total": int(rows_total)}
         if self._policy is None:
+            tc = None
+            if spans.ENABLED:
+                # Same stable per-shard ordinal the fault path uses as its
+                # idempotence seq — just not shipped in the envelope, since
+                # plain mode has no replay to dedup.
+                with self._send_lock:
+                    tc = spans.wire_context("ps.push_rows", self._seq)
+                    self._seq += 1
             self._window.admit(
                 self._client.call_async(
-                    "ps.push_rows", env, arrays=(idx, rows), buffered=True
+                    "ps.push_rows", env, arrays=(idx, rows), buffered=True, tc=tc
                 )
             )
             return
@@ -742,10 +778,14 @@ class RemotePSShard:
         with self._send_lock:
             env["seq"] = self._seq
             self._seq += 1
+            # Trace context derives from the idempotence seq and is captured
+            # in the closure: a post-crash replay puts the *identical*
+            # context back on the wire, so the span tree stays single.
+            tc = spans.wire_context("ps.push_rows", env["seq"])
 
-            def resend(env=env, idx=idx, rows=rows):
+            def resend(env=env, idx=idx, rows=rows, tc=tc):
                 return self._client.call_async(
-                    "ps.push_rows", env, arrays=(idx, rows), buffered=True
+                    "ps.push_rows", env, arrays=(idx, rows), buffered=True, tc=tc
                 )
 
             self._window.submit(resend)
@@ -948,14 +988,20 @@ class RemoteProvenanceShard:
         observe the batch — the server executes per-connection in order."""
         env = {"docs": list(docs), "seqs": [int(s) for s in seqs],
                "write": bool(write)}
+        # Keyed on the batch's first global doc seq (monitor-assigned, so
+        # replay-stable); in fault mode it is captured in the resend
+        # closure so replays carry the identical context.
+        tc = spans.wire_context(
+            "prov.add_many", env["seqs"][0] if env["seqs"] else -1
+        )
         if self._policy is None:
             self._window.admit(
-                self._client.call_async("prov.add_many", env, buffered=True)
+                self._client.call_async("prov.add_many", env, buffered=True, tc=tc)
             )
             return
 
-        def resend(env=env):
-            return self._client.call_async("prov.add_many", env, buffered=True)
+        def resend(env=env, tc=tc):
+            return self._client.call_async("prov.add_many", env, buffered=True, tc=tc)
 
         self._window.submit(resend)
 

@@ -23,6 +23,8 @@ from repro.core.ps import BatchedPSClient, FederatedPS, ParameterServer
 from repro.core.reduction import Reducer, merge_stats
 from repro.core.stats import RunningStats
 from repro.telemetry import registry as telemetry
+from repro.telemetry import spans
+from repro.telemetry.ring import get_ring, prefer_recording
 from repro.telemetry.selftrace import SELF_TRACE_PID, get_self_tracer
 
 _INGEST_STAGES = ("ad", "reduce", "ps", "prov", "write", "publish")
@@ -95,6 +97,9 @@ class ChimbukoMonitor:
         stream_path: Optional[str] = None,
         viz_serve: Optional[int] = None,
         self_trace: Optional[bool] = None,
+        trace_spans: Optional[bool] = None,
+        span_sample_every: int = 8,
+        span_dump_severity: int = 6,
     ):
         self.registry = registry or FunctionRegistry()
         # Kept for observability: the gateway's /metrics federates
@@ -118,6 +123,22 @@ class ChimbukoMonitor:
         if self_trace is not None:
             self._selftrace.set_enabled(bool(self_trace))
         self._selftrace_proc_named = False
+        # Distributed request tracing (repro.telemetry.spans): every ingest
+        # runs under a deterministic per-frame trace root; anomalous frames
+        # upgrade their sampled bit (tail sampling) and high-severity ones
+        # dump the flight recorder.  NOTE trace_spans=True only arms *this*
+        # process — spawned shard workers read REPRO_SPANS=1 at import, so
+        # socket-transport runs must set the env var before the pool spawns.
+        if trace_spans is not None:
+            spans.set_enabled(bool(trace_spans))
+        self._span_sample = max(int(span_sample_every), 0)
+        self._span_dump_severity = int(span_dump_severity)
+        # proc label -> {(trace, span): span}: the monitor-side archive of
+        # federated flight-recorder views (quiesce/close pull these), keyed
+        # by process so the export can draw per-process span tracks.
+        self._span_views: Dict[str, Dict[Tuple[int, int], dict]] = {}
+        if spans.ENABLED:
+            spans.install_health_trigger()
         # PS federation (paper §III-B2): with ps_shards > 1 the stats table
         # is partitioned over fid space across shard instances; clients can
         # additionally coalesce ps_batch_frames deltas per push.  With
@@ -225,7 +246,32 @@ class ChimbukoMonitor:
         return self.ads[rank]
 
     def ingest(self, frame: Frame) -> ADFrameResult:
-        """Full in-situ path for one rank-frame."""
+        """Full in-situ path for one rank-frame.
+
+        With tracing armed the whole ingest runs under the frame's
+        deterministic trace root (trace id = H(rank, step)), so every RPC
+        the frame causes — PS pushes, provenance batches, their server-side
+        handling — hangs off one causal tree."""
+        if not spans.ENABLED:
+            return self._ingest_frame(frame)
+        ctx = spans.root_context(frame.rank, frame.step, self._span_sample)
+        t0 = spans.now_us()
+        err = False
+        with spans.use(ctx):
+            try:
+                return self._ingest_frame(frame)
+            except BaseException:
+                err = True
+                raise
+            finally:
+                fin = spans.current() or ctx  # tail sampling may upgrade it
+                spans.record(
+                    fin.trace_id, fin.span_id, 0, "frame", "frame",
+                    fin.flags, t0, spans.now_us() - t0, err=err,
+                    order=(frame.step, frame.rank),
+                )
+
+    def _ingest_frame(self, frame: Frame) -> ADFrameResult:
         if telemetry.ENABLED:
             timer = _StageTimer(
                 self._m_stage,
@@ -234,6 +280,13 @@ class ChimbukoMonitor:
         else:
             timer = _NULL_TIMER
         res = self._ad(frame.rank).process_frame(frame)
+        if res.n_anomalies and spans.ENABLED:
+            # Tail sampling: the anomaly verdict upgrades the frame's
+            # sampled bit before the provenance writes ship, so the whole
+            # anomaly path (client + server + ingest spans) is kept.  PS
+            # pushes travel inside process_frame, before the verdict — they
+            # follow the 1/N policy.
+            spans.mark_sampled()
         timer.mark("ad")
         kept_idx = self.reducers[frame.rank].reduce(res)
         kept = res.records[kept_idx]
@@ -254,6 +307,12 @@ class ChimbukoMonitor:
                 for k, (seq, sev) in zip(kpos, self.provdb.last_ingest)
             ]
         timer.mark("prov")
+        if anom and spans.ENABLED:
+            max_sev = max(sev for _k, _s, sev in anom)
+            if max_sev >= self._span_dump_severity:
+                get_ring().dump(
+                    f"anomaly:sev{max_sev}:r{frame.rank}s{frame.step}"
+                )
         ts = int(res.records["exit"].max()) if len(res.records) else None
         key = (frame.rank, frame.step)
         self.frame_meta[key] = (ts, len(res.records), res.n_anomalies)
@@ -352,6 +411,57 @@ class ChimbukoMonitor:
         for client in self._ps_clients.values():
             client.flush()
 
+    # ----------------------------------------------------------- span fleet
+    def _federate_spans(self, dump: bool, reason: str) -> List[str]:
+        """Pull every process's flight recorder into the monitor-side
+        per-proc archive (``_span_views``); returns degraded-shard errors."""
+        from repro.telemetry.federate import federated_spans
+
+        procs, errors = federated_spans(
+            self.shard_endpoints, local_proc="monitor",
+            dump=dump, reason=reason,
+        )
+        for proc, view in procs.items():
+            dst = self._span_views.setdefault(proc, {})
+            for span in view["spans"]:
+                key = (span["trace"], span["span"])
+                dst[key] = prefer_recording(dst.get(key), span)
+        return errors
+
+    def quiesce(self, dump: bool = True) -> dict:
+        """Deterministic settle point: flush + drain every in-flight write,
+        then pull the fleet's span flight recorders into the monitor-side
+        archive.  After a quiesce the unacked-write set is empty and every
+        server-side span so far is safely archived locally, so a SIGKILL
+        of any shard afterwards cannot orphan part of a sampled trace —
+        the byte-identity anchor for traced chaos runs."""
+        self.flush_ps()
+        for obj in (self.ps, self.provdb):
+            drain = getattr(obj, "drain", None)
+            if drain is not None:
+                drain()
+        errors: List[str] = []
+        if spans.ENABLED:
+            errors = self._federate_spans(dump=dump, reason="quiesce")
+        return {"errors": errors}
+
+    def fleet_spans(self) -> Dict[str, List[dict]]:
+        """The per-process span sets the export renders: the federated
+        archive plus whatever sits in the local ring right now."""
+        out = {p: list(v.values()) for p, v in self._span_views.items()}
+        local = {(s["trace"], s["span"]): s for s in out.get("monitor", ())}
+        for span in get_ring().collect():
+            key = (span["trace"], span["span"])
+            local[key] = prefer_recording(local.get(key), span)
+        out["monitor"] = list(local.values())
+        return out
+
+    def _render_spans(self) -> None:
+        from repro.export.chrome_trace import render_spans
+
+        self._federate_spans(dump=True, reason="close")
+        render_spans(self._trace_writer, self.fleet_spans())
+
     def close(self) -> None:
         self.flush_ps()
         if self.viz_gateway is not None:
@@ -361,6 +471,8 @@ class ChimbukoMonitor:
         if self._trace_writer is not None:
             if self._selftrace.enabled:
                 self._drain_selftrace()  # spans since the last ingest
+            if spans.ENABLED:
+                self._render_spans()  # federated span trees + flow arrows
             self._trace_writer.close()
             self._trace_writer = None
         if self._stream_writer is not None:

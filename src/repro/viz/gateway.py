@@ -49,7 +49,9 @@ from repro.fault.health import get_health
 from repro.telemetry import registry as telemetry
 from repro.telemetry.exposition import CONTENT_TYPE as _METRICS_CONTENT_TYPE
 from repro.telemetry.exposition import render_exposition
-from repro.telemetry.federate import federated_snapshot
+from repro.telemetry import spans
+from repro.telemetry.buildinfo import register_build_info
+from repro.telemetry.federate import federated_snapshot, federated_spans
 
 from . import http as H
 from . import ws as W
@@ -365,13 +367,21 @@ class VizGateway(EventLoopServer):
             conn.busy = True
             self._offload(lambda: self._run_metrics(conn, req, etag))
             return
+        if path == "/spans":
+            # Federated span flight recorders; ?dump=1 freezes every ring
+            # first (the on-demand flight-recorder trigger).  Blocking RPC
+            # like /metrics, so it runs on a worker.
+            dump = bool(_int_param(req, "dump", 0))
+            conn.busy = True
+            self._offload(lambda: self._run_spans(conn, req, etag, dump))
+            return
         if path == "/":
             # Pure loop-owned counters: the only view that stays inline.
             body = _dumps({
                 "service": "repro.viz.gateway",
                 "endpoints": ["/dashboard", "/series", "/function",
                               "/callstack", "/provenance", "/trace",
-                              "/metrics", "/ws"],
+                              "/metrics", "/spans", "/ws"],
                 "frames": int(getattr(self.monitor, "frames_ingested", 0)),
                 "viewers": len(self._viewers),
             })
@@ -456,6 +466,7 @@ class VizGateway(EventLoopServer):
         if san.ENABLED:
             san.assert_worker_thread(self)
         try:
+            register_build_info()  # idempotent: every scrape is attributable
             endpoints = list(getattr(self.monitor, "shard_endpoints", None) or ())
             merged, _errors = federated_snapshot(endpoints, local_proc="gateway")
             body = render_exposition(merged).encode("utf-8")
@@ -463,6 +474,36 @@ class VizGateway(EventLoopServer):
                 200, body, content_type=_METRICS_CONTENT_TYPE,
                 headers=(("ETag", etag),), keep_alive=req.keep_alive,
             )
+            fail = not req.keep_alive
+        except Exception as e:  # noqa: BLE001 - worker bug answers 500
+            resp = H.error_response(H.HttpError(500, f"{type(e).__name__}: {e}"))
+            fail = True
+        self._post(lambda: self._complete_heavy(conn, resp, fail))
+
+    def _run_spans(self, conn: _VizConn, req: H.HttpRequest, etag: str,
+                   dump: bool) -> None:
+        """Worker-side ``/spans``: the fleet's span flight recorders, keyed
+        by process label, plus their trigger logs and ring stats.
+
+        Each shard scrape is bounded (single dial attempt + per-call
+        deadline, see ``repro.telemetry.federate``), so a stalled shard
+        degrades to an ``errors`` entry instead of stalling the response.
+        """
+        if san.ENABLED:
+            san.assert_worker_thread(self)
+        try:
+            endpoints = list(getattr(self.monitor, "shard_endpoints", None) or ())
+            procs, errors = federated_spans(
+                endpoints, local_proc="gateway", dump=dump,
+                reason="http:/spans",
+            )
+            body = _dumps({
+                "enabled": spans.is_enabled(),
+                "errors": errors,
+                "procs": procs,
+            })
+            resp = H.build_response(200, body, headers=(("ETag", etag),),
+                                    keep_alive=req.keep_alive)
             fail = not req.keep_alive
         except Exception as e:  # noqa: BLE001 - worker bug answers 500
             resp = H.error_response(H.HttpError(500, f"{type(e).__name__}: {e}"))

@@ -1,0 +1,565 @@
+"""repro.telemetry.spans: distributed request tracing.
+
+Layers, mirroring the subsystem:
+
+  * ids — 63-bit logical span ids are pure functions of their parts;
+    the context derivations (root / wire / server / child) compose into
+    a single tree with the STABLE/SAMPLED flag discipline.
+  * wire — the "tc" envelope key is a version-tolerant extension of the
+    RPN1 frame: tc=None encodes byte-identically to the pre-extension
+    framing, a carried context round-trips exactly, malformed contexts
+    are loud FramingErrors.
+  * ring — the bounded flight recorder: wrap, idempotent dumps, the
+    bounded archive, absorb/collect dedup by (trace, span).
+  * propagation — a client RPC under an ambient root context produces a
+    causally-chained client → server → handler-child span path across
+    the transport, including tail-sampling upgrades.
+  * replay — a flaky wire forces resends; the stable ids make every
+    replayed write collapse to ONE span per hop (no forked trees).
+  * export — render_spans is a pure function of the logical span set:
+    shuffled input renders byte-identically, and the output passes the
+    exporter's own structural validator with client→server flow pairs.
+  * end-to-end — a monitored socket-transport run (and, at S ∈ {1,2,4},
+    a SIGKILL-and-recover chaos run) exports a validating trace where
+    every sampled client RPC has a matched server span and flow arrow,
+    byte-identical to a no-fault run of the same seed.
+"""
+import json
+import os
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sim import WorkloadGenerator, nwchem_like
+from repro.core.stats import StatsTable
+from repro.export.chrome_trace import (
+    ChromeTraceWriter,
+    SPAN_PID_BASE,
+    render_spans,
+    validate_trace,
+)
+from repro.fault.chaos import ChaosStream, FlakyProxy, kill_process
+from repro.fault.policy import RetryPolicy
+from repro.launch.shard_server import LocalShardHost, ShardServerPool
+from repro.net.framing import (
+    FrameDecoder,
+    FramingError,
+    encode_frame,
+    pack_payload,
+    unpack_payload,
+)
+from repro.net.shards import RemotePSShard, RemoteProvenanceShard
+from repro.telemetry import spans
+from repro.telemetry.ring import SpanRing, get_ring
+from repro.trace.monitor import ChimbukoMonitor
+
+
+@pytest.fixture(autouse=True)
+def _span_isolation():
+    """Every test starts from a clean recorder and leaves tracing off."""
+    get_ring().clear()
+    prev = os.environ.get("REPRO_SPANS")
+    yield
+    spans.set_enabled(False)
+    if prev is None:
+        os.environ.pop("REPRO_SPANS", None)
+    else:
+        os.environ["REPRO_SPANS"] = prev
+    get_ring().clear()
+
+
+def _wait(pred, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        assert time.monotonic() < deadline, f"timeout waiting for {what}"
+        time.sleep(0.02)
+
+
+def _rand_push(rng, F):
+    n = int(rng.integers(1, 50))
+    delta = StatsTable(F).update_batch(
+        rng.integers(0, F, n), rng.lognormal(3.0, 1.0, n)
+    )
+    idx = np.flatnonzero(delta[:, 0] > 0).astype(np.int64)
+    return idx, np.ascontiguousarray(delta[idx])
+
+
+# A doc shaped the way ProvenanceShard.add requires (rank/step/anomaly
+# with fid/entry/exit) — the minimum the ingest path indexes on.
+def _prov_doc(rank=0, step=0, fid=1, sev=7):
+    return {
+        "rank": rank, "step": step, "severity": sev,
+        "anomaly": {"fid": fid, "func": "f", "entry": 10, "exit": 20},
+    }
+
+
+# ====================================================================== ids
+def test_span_id_deterministic_63bit():
+    a = spans.span_id("trace", 0, 7)
+    assert a == spans.span_id("trace", 0, 7)  # pure function of parts
+    assert 1 <= a < (1 << 63)
+    assert spans.span_id("trace", 0, 7) != spans.span_id("trace", 7, 0)
+    assert spans.hexid(a) == format(a, "016x")
+    # the documented tree derivations chain without collisions
+    trace = spans.span_id("trace", 1, 2)
+    root = spans.span_id(trace, "frame")
+    client = spans.span_id(trace, "ps.push_rows", 5)
+    server = spans.span_id(trace, client, "server")
+    child = spans.span_id(server, "ps.apply")
+    assert len({trace, root, client, server, child}) == 5
+
+
+def test_context_derivations_and_flags():
+    spans.set_enabled(True)
+    root = spans.root_context(rank=3, step=16, sample_every=8)
+    assert root.flags == spans.STABLE | spans.SAMPLED  # 16 % 8 == 0
+    assert spans.root_context(3, 17, 8).flags == spans.STABLE
+    with spans.use(spans.root_context(3, 17, 8)):
+        # tail sampling: the upgrade rewrites the ambient context in place
+        assert not spans.current().sampled
+        upgraded = spans.mark_sampled()
+        assert upgraded.sampled and spans.current().sampled
+        ws = spans.wire_context("ps.push_rows", 5)
+        assert ws.flags & spans.STABLE and ws.flags & spans.SAMPLED
+        assert ws.parent_id == spans.current().span_id
+        assert ws.span_id == spans.span_id(ws.trace_id, "ps.push_rows", 5)
+        # the default per-call derivation drops STABLE (rids drift on retry)
+        dc = spans.derive_call_context("h:1", 0, 42)
+        assert not dc.flags & spans.STABLE and dc.flags & spans.SAMPLED
+    srv = spans.server_context(ws.tc())
+    assert srv.trace_id == ws.trace_id and srv.flags == ws.flags
+    assert srv.span_id == spans.span_id(ws.trace_id, ws.span_id, "server")
+    # outside any ambient context there is nothing to derive
+    assert spans.current() is None and spans.wire_context("m", 0) is None
+
+
+def test_child_span_records_and_err_flag():
+    spans.set_enabled(True)
+    root = spans.root_context(0, 0, 1)
+    with spans.use(root):
+        with spans.span("ps.apply") as child:
+            assert child.span_id == spans.span_id(root.span_id, "ps.apply")
+            assert spans.current() is child
+        with pytest.raises(RuntimeError):
+            with spans.span("boom"):
+                raise RuntimeError("x")
+    got = {s["name"]: s for s in get_ring().snapshot()}
+    assert got["ps.apply"]["parent"] == root.span_id
+    assert "err" not in got["ps.apply"]
+    assert got["boom"]["err"] == 1
+
+
+# ===================================================================== wire
+def test_tc_envelope_roundtrip_and_pre_extension_bytes():
+    env = {"m": 1}
+    arrays = (np.arange(6, dtype=np.float64).reshape(2, 3),)
+    # version tolerance, direction 1: no context encodes byte-identically
+    # to the pre-extension framing (no "tc" key ever hits the envelope)
+    plain = pack_payload(env, arrays)
+    assert plain == pack_payload(env, arrays, tc=None)
+    assert b'"tc"' not in plain
+    # direction 2: a carried context round-trips exactly and leaves the
+    # env/arrays untouched for handlers that ignore it
+    tc = (spans.span_id("trace", 0, 1), spans.span_id("s"), 3)
+    got_env, got_arrays, got_tc = unpack_payload(pack_payload(env, arrays, tc))
+    assert got_tc == tc and got_env == env
+    assert got_arrays[0].tobytes() == arrays[0].tobytes()
+    assert unpack_payload(plain)[2] is None
+    # the full frame path: FrameDecoder surfaces the context on Frame.tc
+    dec = FrameDecoder()
+    frames = dec.feed(encode_frame(7, 0, 9, env, arrays, tc=tc))
+    assert len(frames) == 1 and frames[0].tc == tc
+    assert dec.feed(encode_frame(7, 0, 10, env, arrays))[0].tc is None
+    # malformed on-the-wire contexts are loud framing errors, not Nones
+    import struct
+
+    bad = json.dumps({"env": {}, "arrays": [], "tc": "nope"}).encode()
+    with pytest.raises(FramingError, match="trace context"):
+        unpack_payload(struct.pack("!I", len(bad)) + bad)
+
+
+# ===================================================================== ring
+def test_ring_wrap_dump_absorb_collect():
+    r = SpanRing(capacity=8)
+    mk = lambda i: {"trace": 1, "span": i, "name": f"s{i}", "flags": 3}
+    for i in range(20):
+        r.record(mk(i))
+    assert len(r) == 8  # wrapped: only the most recent 8 live
+    assert r.stats()["recorded"] == 20
+    assert [s["span"] for s in r.snapshot()] == list(range(12, 20))
+    # dumps freeze the ring into the archive, idempotently per span id
+    assert r.dump("t1") == 8
+    assert r.dump("t2") == 0
+    assert [t["reason"] for t in r.triggers()] == ["t1", "t2"]
+    # absorb merges a remote view with the same dedup key
+    assert r.absorb([mk(12), mk(99)]) == 1
+    # collect = archive + live ring, unique by (trace, span)
+    keys = [(s["trace"], s["span"]) for s in r.collect()]
+    assert len(keys) == len(set(keys)) == 9
+    # the archive is bounded at ARCHIVE_FACTOR * capacity, oldest evicted
+    r.absorb([{"trace": 2, "span": i, "flags": 3} for i in range(100)])
+    assert r.stats()["archived"] == 32
+    assert r.stats()["archive_dropped"] > 0
+    r.clear()
+    assert len(r) == 0 and r.collect() == [] and r.stats()["recorded"] == 0
+
+
+# ============================================================== propagation
+def test_rpc_propagation_client_server_handler(tmp_path):
+    """One write RPC under an ambient root: the client span, the server
+    span, and the handler child chain into a single stable tree across
+    the socket transport (in-process shard host: shared ring)."""
+    spans.set_enabled(True)
+    with LocalShardHost(1, kind="both") as host:
+        ps = RemotePSShard(host.endpoints[0], 0, 1, 16)
+        prov = RemoteProvenanceShard(
+            host.endpoints[0], path=str(tmp_path / "p.jsonl")
+        )
+        root = spans.root_context(0, 0, 1)
+        rng = np.random.default_rng(0)
+        idx, rows = _rand_push(rng, 16)
+        with spans.use(root):
+            ps.push_sparse_nowait(idx, rows, 16)
+            prov.add_many_nowait([_prov_doc()], [0])
+            ps.drain()
+            prov.drain()
+        ps.close()
+        prov.close()
+    by_name = {}
+    for s in get_ring().collect():
+        by_name.setdefault(s["name"], []).append(s)
+    for method in ("ps.push_rows", "prov.add_many"):
+        (client,) = by_name[f"rpc.client:{method}"]
+        (server,) = by_name[f"rpc.server:{method}"]
+        assert client["flags"] == server["flags"] == spans.STABLE | spans.SAMPLED
+        assert client["trace"] == server["trace"] == root.trace_id
+        assert client["parent"] == root.span_id
+        assert server["parent"] == client["span"]
+        assert server["span"] == spans.span_id(
+            root.trace_id, client["span"], "server"
+        )
+        assert client["kind"] == "client"
+        assert server["kind"] in ("server", "worker")
+    (apply_,) = by_name["ps.apply"]
+    (ingest,) = by_name["prov.ingest"]
+    assert apply_["parent"] == by_name["rpc.server:ps.push_rows"][0]["span"]
+    assert ingest["parent"] == by_name["rpc.server:prov.add_many"][0]["span"]
+
+
+def test_spans_dump_verb_freezes_remote_recorder(tmp_path):
+    """The reserved spans.dump RPC returns the worker's collected spans
+    and, with dump=1, archives them with the trigger logged."""
+    from repro.net import RPCClient
+
+    spans.set_enabled(True)
+    with LocalShardHost(1, kind="ps") as host:
+        ps = RemotePSShard(host.endpoints[0], 0, 1, 16)
+        with spans.use(spans.root_context(0, 0, 1)):
+            idx, rows = _rand_push(np.random.default_rng(1), 16)
+            ps.push_sparse_nowait(idx, rows, 16)
+            ps.drain()
+        cli = RPCClient(host.endpoints[0])
+        env, _ = cli.call("spans.dump", {"dump": True, "reason": "test"})
+        cli.close()
+        ps.close()
+    names = {s["name"] for s in env["spans"]}
+    assert "rpc.server:ps.push_rows" in names and "ps.apply" in names
+    assert env["stats"]["archived"] > 0
+    assert any(t["reason"] == "test" for t in env["triggers"])
+
+
+def test_flaky_replay_collapses_to_single_tree(tmp_path):
+    """Resent writes (dropped + torn connections) re-record the *same*
+    deterministic ids: the raw ring shows the duplicate recordings, and
+    the collected view still holds exactly one client span and one server
+    span per logical push — the tree never forks."""
+    F, N = 16, 40
+    spans.set_enabled(True)
+    cs = ChaosStream(77)
+    with LocalShardHost(1, kind="ps") as host:
+        with FlakyProxy(host.endpoints[0], drop_at=(4 + cs.below(8),),
+                        truncate_at=(20 + cs.below(8),)) as proxy:
+            stub = RemotePSShard(
+                proxy.endpoint, 0, 1, F, wal_dir=str(tmp_path),
+                policy=RetryPolicy(retries=8, base_delay=0.02),
+            )
+            rng = np.random.default_rng(1)
+            with spans.use(spans.root_context(0, 0, 1)):
+                for _ in range(N):
+                    idx, rows = _rand_push(rng, F)
+                    stub.push_sparse_nowait(idx, rows, F)
+                stub.drain()
+            assert proxy.faults == 2
+            stub.close()
+    raw = [s for s in get_ring().snapshot()
+           if s["name"] == "rpc.client:ps.push_rows"]
+    assert len(raw) > N  # the replays really did re-record
+    col = get_ring().collect()
+    clients = {s["span"]: s for s in col
+               if s["name"] == "rpc.client:ps.push_rows"}
+    servers = {s["parent"]: s for s in col
+               if s["name"] == "rpc.server:ps.push_rows"}
+    assert len(clients) == N
+    # exactly one server span per client span, each a proper child
+    assert set(servers) == set(clients)
+    for cid, srv in servers.items():
+        assert srv["span"] == spans.span_id(srv["trace"], cid, "server")
+
+
+# =================================================================== export
+def _synthetic_fleet():
+    """Two traces over two procs, stable+sampled, with a known flow pair
+    and some flight-recorder-only (non-exportable) noise mixed in."""
+    out = {"monitor": [], "shard0": []}
+    for step in (0, 1):
+        trace = spans.span_id("trace", 0, step)
+        root = spans.span_id(trace, "frame")
+        client = spans.span_id(trace, "ps.push_rows", step)
+        server = spans.span_id(trace, client, "server")
+        child = spans.span_id(server, "ps.apply")
+        out["monitor"] += [
+            {"trace": trace, "span": root, "parent": 0, "name": "frame",
+             "kind": "frame", "flags": 3, "t0": 5, "dur": 9,
+             "ord": [step, 0]},
+            {"trace": trace, "span": client, "parent": root,
+             "name": "rpc.client:ps.push_rows", "kind": "client",
+             "flags": 3, "t0": 6, "dur": 7},
+            # unstable (rid-derived) spans stay flight-recorder-only
+            {"trace": trace, "span": spans.span_id(trace, "call", step),
+             "parent": root, "name": "rpc.client:ps.stats",
+             "kind": "client", "flags": 1, "t0": 6, "dur": 1},
+        ]
+        out["shard0"] += [
+            {"trace": trace, "span": server, "parent": client,
+             "name": "rpc.server:ps.push_rows", "kind": "worker",
+             "flags": 3, "t0": 0, "dur": 3},
+            {"trace": trace, "span": child, "parent": server,
+             "name": "ps.apply", "kind": "span", "flags": 3,
+             "t0": 1, "dur": 1},
+        ]
+    return out
+
+
+def _render_bytes(path, fleet):
+    w = ChromeTraceWriter(path=path)
+    n = render_spans(w, fleet)
+    w.close()
+    with open(path, "rb") as f:
+        return n, f.read()
+
+
+def test_render_spans_pure_function_of_span_set(tmp_path):
+    fleet = _synthetic_fleet()
+    n, a = _render_bytes(str(tmp_path / "a.json"), fleet)
+    assert n == 8  # 2 traces x (frame, client, server, apply); noise cut
+    # input order (and duplicate copies, as crash replay federates) is
+    # irrelevant: the rendering depends only on the logical span set
+    shuffled = {p: list(reversed(v)) + v[:1] for p, v in fleet.items()}
+    _, b = _render_bytes(str(tmp_path / "b.json"), shuffled)
+    assert a == b
+    counts = validate_trace(str(tmp_path / "a.json"))
+    assert counts["flows"] == 2 and counts["completes"] == 8
+    doc = json.loads(a)
+    xs = [e for e in doc["traceEvents"] if e.get("cat") == "span"]
+    assert {e["args"]["kind"] for e in xs} == {
+        "frame", "client", "worker", "span"
+    }
+    assert "rpc.client:ps.stats" not in {e["name"] for e in xs}
+    # cross-process: monitor and shard0 land on distinct span pids, and
+    # the flow arrows tie the client entry tick to the server entry tick
+    pids = {e["pid"] for e in xs}
+    assert pids == {SPAN_PID_BASE, SPAN_PID_BASE + 1}
+    flows = [e for e in doc["traceEvents"] if e.get("cat") == "rpc"]
+    clients = {e["args"]["span"]: e for e in xs
+               if e["args"]["kind"] == "client"}
+    for f in flows:
+        assert spans.hexid(f["id"]) in clients
+
+
+# =============================================================== end-to-end
+def _assert_client_server_flows(trace_path):
+    """The acceptance predicate: every exported client RPC span has a
+    matched server/worker child span and a paired s/f flow arrow."""
+    doc = validate_trace(trace_path)  # structural validity first
+    raw = json.load(open(trace_path))
+    xs = [e for e in raw["traceEvents"]
+          if e.get("cat") == "span" and e.get("ph") == "X"]
+    clients = [e for e in xs if e["args"]["kind"] == "client"]
+    assert clients, "no client RPC spans were exported"
+    kids = {}
+    for e in xs:
+        kids.setdefault(e["args"]["parent"], []).append(e)
+    flow_s = {e["id"] for e in raw["traceEvents"]
+              if e.get("cat") == "rpc" and e["ph"] == "s"}
+    flow_f = {e["id"] for e in raw["traceEvents"]
+              if e.get("cat") == "rpc" and e["ph"] == "f"}
+    for c in clients:
+        served = [k for k in kids.get(c["args"]["span"], ())
+                  if k["args"]["kind"] in ("server", "worker")]
+        assert served, f"client span {c['args']['span']} has no server span"
+        assert int(c["args"]["span"], 16) in flow_s & flow_f
+    return doc, xs
+
+
+def test_monitored_run_exports_flows(tmp_path):
+    """A traced socket-transport monitored run: the export carries the
+    frame-rooted span trees and validating client->server flow pairs."""
+    trace = str(tmp_path / "trace.json")
+    spans.set_enabled(True)
+    with LocalShardHost(2, kind="both") as host:
+        mon = ChimbukoMonitor(
+            num_funcs=64, prov_path=str(tmp_path / "p.jsonl"),
+            min_samples=8, alpha=6.0, provdb_shards=2,
+            ps_transport="socket", provdb_transport="socket",
+            shard_endpoints=host.endpoints,
+            run_info={"timestamp": 0.0}, export_trace=trace,
+            trace_spans=True, span_sample_every=2,
+        )
+        gen = WorkloadGenerator(nwchem_like(), n_ranks=2, seed=0)
+        for step in range(6):
+            for rank in range(2):
+                mon.ingest(gen.frame(rank, step)[0])
+        assert mon.quiesce()["errors"] == []
+        fleet = mon.fleet_spans()
+        mon.close()
+    assert "monitor" in fleet and any(p.startswith("shard") for p in fleet)
+    _, xs = _assert_client_server_flows(trace)
+    frames = [e for e in xs if e["args"]["kind"] == "frame"]
+    # sample_every=2 provisionally keeps half the frames; anomalies may
+    # tail-upgrade more but never fewer
+    assert len(frames) >= 6
+    assert all(e["args"]["parent"] == spans.hexid(0) for e in frames)
+
+
+def test_gateway_spans_endpoint(tmp_path):
+    """/spans federates every process's flight recorder over HTTP and
+    ?dump=1 freezes them with the trigger logged."""
+    from test_viz_gateway import _get
+
+    spans.set_enabled(True)
+    with LocalShardHost(1, kind="both") as host:
+        mon = ChimbukoMonitor(
+            num_funcs=64, prov_path=str(tmp_path / "p.jsonl"),
+            min_samples=8, alpha=6.0,
+            ps_transport="socket", provdb_transport="socket",
+            shard_endpoints=host.endpoints,
+            run_info={"timestamp": 0.0},
+            trace_spans=True, span_sample_every=1, viz_serve=0,
+        )
+        gen = WorkloadGenerator(nwchem_like(), n_ranks=1, seed=0)
+        for step in range(3):
+            mon.ingest(gen.frame(0, step)[0])
+        mon.quiesce()
+        status, _, body = _get(mon.viz_gateway.endpoint, "/spans?dump=1")
+        mon.close()
+    assert status == 200
+    doc = json.loads(body)
+    assert doc["enabled"] is True and doc["errors"] == []
+    assert set(doc["procs"]) == {"gateway", "shard0"}
+    shard = doc["procs"]["shard0"]
+    assert any(s["name"] == "rpc.server:ps.push_rows" for s in shard["spans"])
+    assert any(t["reason"] == "http:/spans" for t in shard["triggers"])
+
+
+def _traced_run(tmp, S, kill=None):
+    """One traced, monitored, socket-transport run; ``kill`` is an
+    optional (step, worker_index) SIGKILL injected right after that
+    step's quiesce (both variants quiesce there, so the no-kill twin is
+    byte-comparable)."""
+    os.makedirs(tmp, exist_ok=True)
+    get_ring().clear()
+    prov = os.path.join(tmp, "prov.jsonl")
+    trace = os.path.join(tmp, "trace.json")
+    # spawned shard workers read REPRO_SPANS at import: arm before spawn
+    os.environ["REPRO_SPANS"] = "1"
+    kill_step = kill[0] if kill else 5
+    with ShardServerPool(S, kind="both", supervise=True,
+                         supervise_poll=0.05) as pool:
+        mon = ChimbukoMonitor(
+            num_funcs=64, prov_path=prov, min_samples=8, alpha=6.0,
+            provdb_shards=S,
+            ps_transport="socket", provdb_transport="socket",
+            shard_endpoints=pool.endpoints,
+            ps_wal_dir=os.path.join(tmp, "wal"),
+            fault_policy=RetryPolicy(retries=8, base_delay=0.05),
+            run_info={"timestamp": 0.0}, export_trace=trace,
+            trace_spans=True, span_sample_every=4,
+        )
+        spec = nwchem_like(anomaly_rate=0.02)
+        for f in spec.funcs.values():
+            f.anomaly_scale = 40.0
+        gen = WorkloadGenerator(spec, n_ranks=2, seed=0)
+        for step in range(12):
+            for rank in range(2):
+                mon.ingest(gen.frame(rank, step)[0])
+            if step == kill_step:
+                # quiesce first: all acked writes' server spans are now
+                # archived monitor-side, so the SIGKILL cannot orphan a
+                # sampled trace (the byte-identity anchor)
+                mon.quiesce()
+                if kill:
+                    victim = pool.procs[kill[1]]
+                    kill_process(victim)
+                    victim.join(10)
+                    _wait(lambda: pool.restarts >= 1,
+                          what="supervisor respawn")
+        mon.quiesce()
+        mon.close()
+        fleet = mon.fleet_spans()
+        restarts = pool.restarts
+    with open(trace, "rb") as f:
+        return f.read(), fleet, restarts
+
+
+def _assert_single_trees(fleet):
+    """S3: across the whole federated fleet view, the stable span set
+    forms exactly one tree per trace — crash replay deduplicated."""
+    merged = {}
+    for proc, view in fleet.items():
+        for s in view:
+            if s["flags"] & spans.STABLE:
+                prior = merged.get((s["trace"], s["span"]))
+                if prior is not None:
+                    # a replayed span may surface from several recorders,
+                    # but always with identical logical content
+                    for k in ("parent", "name", "kind", "flags"):
+                        assert prior[k] == s[k]
+                merged[(s["trace"], s["span"])] = s
+    by_trace = {}
+    for (trace, _sid), s in merged.items():
+        by_trace.setdefault(trace, {})[s["span"]] = s
+    assert by_trace
+    for trace, members in by_trace.items():
+        roots = [s for s in members.values()
+                 if s["kind"] == "frame" and not s["parent"]]
+        assert len(roots) == 1, f"trace {trace:x} has {len(roots)} roots"
+        for s in members.values():  # every parent chain reaches the root
+            seen, cur = set(), s
+            while cur["parent"]:
+                assert cur["span"] not in seen, "cycle in span tree"
+                seen.add(cur["span"])
+                cur = members[cur["parent"]]
+            assert cur["span"] == roots[0]["span"]
+
+
+@pytest.mark.parametrize("S", [1, 2, 4])
+def test_traced_chaos_kill_byte_identical_export(tmp_path, S):
+    """Acceptance: SIGKILL a live PS/prov worker mid-run at S shards;
+    the replayed writes re-derive identical span ids, so the exported
+    trace byte-matches the no-fault twin of the same seed, validates,
+    and pairs every sampled client RPC with its server span by a flow
+    arrow; the fleet view holds one tree per trace."""
+    from repro.core.provenance import static_provenance
+
+    static_provenance()  # settle lazy env probes before the first run
+    cs = ChaosStream(4040 + S)
+    kill = (4 + cs.below(4), cs.below(S))
+    ref_trace, _f, ref_restarts = _traced_run(str(tmp_path / "ref"), S)
+    trace, fleet, restarts = _traced_run(str(tmp_path / "kill"), S, kill)
+
+    assert ref_restarts == 0 and restarts >= 1
+    assert trace == ref_trace, "kill-run export diverged from no-fault twin"
+    _assert_client_server_flows(str(tmp_path / "kill" / "trace.json"))
+    _assert_single_trees(fleet)
